@@ -1,0 +1,113 @@
+"""Benchmark aggregator: one entry per paper table/figure + the roofline
+report.  Prints ``name,value,derived`` CSV lines and writes JSON records
+under experiments/.
+
+  table1  — BLEU-analog quality + mean accepted block size (paper Table 1)
+  table2  — ordinal task, distance criterion (paper Table 2)
+  table4  — iteration vs wall-clock speedup (paper Table 4 / Fig. 4)
+  kernels — Pallas kernel microbenches vs their jnp oracles (CPU interpret)
+  roofline— aggregated dry-run roofline terms (EXPERIMENTS.md §Roofline)
+
+``--quick`` runs reduced step counts (CI-sized); default is the full
+CPU-scale reproduction (~30-45 min).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def bench_kernels(emit):
+    """Microbench: kernel (interpret) vs oracle — correctness-oriented on
+    CPU; the numbers that matter for TPU live in the roofline analysis."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    b, kq, h, kv, hd, l = 1, 8, 8, 2, 64, 2048
+    q = jnp.asarray(rng.standard_normal((b, kq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, l, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, l, kv, hd)), jnp.float32)
+    qpos = jnp.asarray(np.arange(l - kq, l)[None], jnp.int32)
+    kvpos = jnp.asarray(np.arange(l)[None], jnp.int32)
+
+    for name, fn in (("verify_attention_ref",
+                      lambda: ref.verify_attention(q, k, v, qpos, kvpos)),
+                     ("verify_attention_pallas_interp",
+                      lambda: ops.verify_attention(q, k, v, qpos, kvpos))):
+        fn()
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        emit(name, (time.perf_counter() - t0) * 1e6, "us_per_call")
+
+
+def main():
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fresh", action="store_true",
+                    help="re-run the table experiments even when a cached "
+                         "experiments/tableN.json exists")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table4,kernels,roofline")
+    args = ap.parse_args()
+    which = set(args.only.split(",")) if args.only else {
+        "table1", "table2", "table4", "kernels", "roofline"}
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value},{derived}", flush=True)
+
+    def cached(path):
+        if args.fresh or not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    if "table1" in which:
+        res = cached("experiments/table1.json")
+        if res is None:
+            from benchmarks import table1_block_size as t1
+            res = (t1.run(ks=(2, 4), pretrain_steps=250, head_steps=200,
+                          n_distill_batches=16)
+                   if args.quick else t1.run())
+        for key, r in sorted(res.items()):
+            emit(f"table1/{key}/accuracy", f"{r['accuracy']:.4f}")
+            emit(f"table1/{key}/mean_accepted", f"{r['mean_accepted']:.3f}")
+
+    if "table2" in which:
+        res = cached("experiments/table2.json")
+        if res is None:
+            from benchmarks import table2_distance as t2
+            res = (t2.run(ks=(2, 4), pretrain_steps=250, head_steps=200)
+                   if args.quick else t2.run())
+        for key, r in sorted(res.items()):
+            emit(f"table2/{key}/mean_accepted", f"{r['mean_accepted']:.3f}")
+            emit(f"table2/{key}/mae", f"{r['mae']:.3f}")
+
+    if "table4" in which:
+        res = cached("experiments/table4.json")
+        if res is None:
+            from benchmarks import table4_wallclock as t4
+            res = (t4.run(ks=(1, 2, 4), pretrain_steps=250, head_steps=200)
+                   if args.quick else t4.run())
+        for key, r in sorted(res.items()):
+            emit(f"table4/{key}/wallclock_speedup",
+                 f"{r['wallclock_speedup']:.3f}")
+            emit(f"table4/{key}/mean_accepted", f"{r['mean_accepted']:.3f}")
+
+    if "kernels" in which:
+        bench_kernels(emit)
+
+    if "roofline" in which:
+        from benchmarks import roofline
+        sys.argv = ["roofline"]
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

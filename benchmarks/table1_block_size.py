@@ -1,0 +1,94 @@
+"""Table 1 analog: BLEU-analog quality + mean accepted block size k̂ on the
+cipher-MT task for k ∈ KS under the four settings
+
+    Regular (frozen, gold) | Distillation (frozen, distilled)
+    Fine Tuning (gold)     | Both (fine-tuned, distilled)
+
+plus the paper's §7.1 follow-up: top-k approximate selection for the "Both"
+models.  Paper claims being validated (EXPERIMENTS.md §Paper-claims):
+  * frozen + gold preserves quality with k̂ > 1 that saturates (~1.7 in the
+    paper) as k grows,
+  * fine-tuning raises k̂ substantially at some quality cost,
+  * distillation raises k̂ AND recovers most of that quality,
+  * top-k selection trades further quality for larger k̂.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.config import DecodeConfig
+
+from benchmarks.workbench import (
+    MTBench,
+    attach_heads,
+    distill_data,
+    eval_mt,
+    finetune_heads,
+    pretrain_mt,
+)
+
+SETTINGS = ("regular", "distill", "finetune", "both")
+
+
+def run(ks=(2, 4, 6, 8), *, pretrain_steps=700, head_steps=500,
+        n_distill_batches=48, out_path="experiments/table1.json",
+        verbose=True):
+    bench = MTBench()
+    base_cfg, base_params = pretrain_mt(bench, steps=pretrain_steps)
+    # separate-seed teacher, as in the paper (distilled data comes from a
+    # different baseline run)
+    _, teacher_params = pretrain_mt(bench, steps=pretrain_steps, seed=100)
+    distilled = distill_data(bench, base_cfg, teacher_params,
+                             n_batches=n_distill_batches)
+
+    results = {}
+    # k = 1 rows: the baselines themselves (greedy decoding)
+    for name, par in (("regular", base_params), ("distill", teacher_params)):
+        cfg1, p1 = attach_heads(base_cfg, par, 1)
+        dec = DecodeConfig(max_new_tokens=bench.tgt_len, block_k=1)
+        results[f"{name}_k1"] = eval_mt(bench, cfg1, p1, dec=dec)
+
+    for k in ks:
+        for setting in SETTINGS:
+            cfg_k, params_k = attach_heads(base_cfg, base_params, k)
+            freeze = setting in ("regular", "distill")
+            data = distilled if setting in ("distill", "both") else None
+            params_k = finetune_heads(bench, cfg_k, params_k,
+                                      steps=head_steps, freeze=freeze,
+                                      distilled=data)
+            dec = DecodeConfig(max_new_tokens=bench.tgt_len, block_k=k,
+                               criterion="exact")
+            res = eval_mt(bench, cfg_k, params_k, dec=dec)
+            results[f"{setting}_k{k}"] = res
+            if setting == "both":
+                for topk in (2, 3):
+                    deck = dec.replace(criterion="topk", top_k=topk)
+                    results[f"both_top{topk}_k{k}"] = eval_mt(
+                        bench, cfg_k, params_k, dec=deck)
+            if verbose:
+                print(f"[table1] k={k} {setting:9s} "
+                      f"acc={res['accuracy']:.3f} khat={res['mean_accepted']:.2f}",
+                      flush=True)
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="experiments/table1.json")
+    args = ap.parse_args()
+    if args.quick:
+        run(ks=(2, 4), pretrain_steps=250, head_steps=200,
+            n_distill_batches=16, out_path=args.out)
+    else:
+        run(out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Ordinal-sequence ("image super-resolution") driver — paper §7.2:
+distance-based approximate acceptance (§5.2) on an output space with a
+natural metric.
+
+Generates smooth curves quantized to integer levels (the 1-D analog of
+raster-scan pixel intensities), trains a combined model, and compares
+exact-match vs ε-distance acceptance: the approximate criterion accepts
+much longer blocks at negligible reconstruction error — the paper's
+Table 2 effect.
+
+    PYTHONPATH=src python examples/superres_ordinal.py [--k 8] [--quick]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DecodeConfig, ModelConfig, TrainConfig
+from repro.core import decode as D
+from repro.data.synthetic import OrdinalCurves
+from repro.launch import steps as steps_lib
+from repro.models import model as M
+from repro.optim import optimizer_init
+
+LEVELS, SEQ, PROMPT = 64, 64, 16
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--epsilon", type=float, default=2.0)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    steps = 200 if args.quick else 800
+
+    cfg = ModelConfig(name="superres", num_layers=2, d_model=96, num_heads=4,
+                      num_kv_heads=4, d_ff=192, vocab_size=LEVELS,
+                      bpd_k=args.k, max_seq_len=256, dtype="float32")
+    tc = TrainConfig(global_batch=16, seq_len=SEQ, lr=3e-3,
+                     warmup_steps=max(steps // 10, 10), head_loss="mean")
+    task = OrdinalCurves(levels=LEVELS, seed=0)
+
+    print(f"[1/2] training (k={args.k}, {steps} steps) ...")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    opt = optimizer_init(params, tc)
+    step = jax.jit(steps_lib.make_train_step(cfg, tc))
+    gen = task.batches(batch=16, seq_len=SEQ, seed=1)
+    key = jax.random.PRNGKey(1)
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        batch = {k: jnp.asarray(v) for k, v in next(gen).items()}
+        params, opt, metrics = step(params, opt, batch, sub)
+        if (i + 1) % max(steps // 4, 1) == 0:
+            print(f"    step {i + 1:4d}  loss {float(metrics['loss']):.3f}")
+
+    print(f"[2/2] decoding {SEQ - PROMPT} levels from {PROMPT}-level prompts")
+    rng = np.random.default_rng(42)
+    full = task.sample(rng, 8, SEQ)
+    prompts = jnp.asarray(full[:, :PROMPT])
+    rows = []
+    for crit, eps in (("exact", 0.0), ("distance", args.epsilon)):
+        dec = DecodeConfig(max_new_tokens=SEQ - PROMPT, block_k=args.k,
+                           criterion=crit, epsilon=eps)
+        toks, stats = jax.jit(
+            lambda b, d=dec: D.bpd_decode(params, cfg, d, b))(
+            {"tokens": prompts})
+        pred = np.asarray(toks)[:, PROMPT:SEQ].astype(int)
+        mae = np.abs(pred - full[:, PROMPT:].astype(int)).mean()
+        rows.append((crit, eps, float(stats["mean_accepted"]),
+                     int(stats["iterations"]), mae))
+
+    print(f"\n    {'criterion':12s} {'eps':>4s} {'mean k̂':>8s} "
+          f"{'iters':>6s} {'MAE':>6s}")
+    for crit, eps, khat, iters, mae in rows:
+        print(f"    {crit:12s} {eps:4.1f} {khat:8.2f} {iters:6d} {mae:6.2f}")
+    print("\n    (distance-based acceptance trades a tiny MAE increase for "
+          "fewer decoding iterations — the paper's Table 2 effect)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Checkpointing: pytree -> (npz arrays + msgpack metadata).
+
+Layout:  <dir>/step_<N>/arrays.npz  +  <dir>/step_<N>/meta.msgpack
+Supports save / restore / latest-step discovery / rotation.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+Pytree = Any
+
+_SEP = "\x1f"  # unit separator: safe key joiner (slashes appear in no keys)
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def visit(path, x):
+        key = _SEP.join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                        for p in path)
+        flat[key] = np.asarray(x)
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Pytree, *, extra: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    meta = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": list(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    _rotate(ckpt_dir, keep)
+    return path
+
+
+def _rotate(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template: Pytree, *, step: Optional[int] = None
+            ) -> Tuple[Pytree, Dict]:
+    """Restore into the structure of ``template`` (shape/dtype preserved from
+    the checkpoint arrays; template provides the tree structure)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+
+    flat_template, treedef = jax.tree_util.tree_flatten(template)
+    flat_saved = _flatten(template)  # same key order as template traversal
+    keys = list(flat_saved.keys())
+    assert len(keys) == len(flat_template)
+    restored = [jnp.asarray(arrays[k]) for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, restored), meta["extra"]

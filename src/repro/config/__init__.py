@@ -1,0 +1,21 @@
+from repro.config.base import (
+    DTYPES,
+    INPUT_SHAPES,
+    DecodeConfig,
+    MeshConfig,
+    ModelConfig,
+    TrainConfig,
+)
+from repro.config.registry import get_config, list_archs, register
+
+__all__ = [
+    "DTYPES",
+    "INPUT_SHAPES",
+    "DecodeConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "TrainConfig",
+    "get_config",
+    "list_archs",
+    "register",
+]

@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Every module in ``repro.configs`` registers a full production config and a
+reduced smoke-test config (<=2 layers, d_model<=512, <=4 experts) of the same
+family.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.config.base import ModelConfig
+
+_REGISTRY: Dict[str, Dict[str, Callable[[], ModelConfig]]] = {}
+
+
+def register(name: str, config_fn: Callable[[], ModelConfig], smoke_fn: Callable[[], ModelConfig]):
+    if name in _REGISTRY:
+        raise ValueError(f"duplicate arch registration: {name}")
+    _REGISTRY[name] = {"config": config_fn, "smoke": smoke_fn}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    # Import side-effect populates the registry on first use.
+    import repro.configs  # noqa: F401
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]["smoke" if smoke else "config"]()
+    cfg.validate()
+    return cfg
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

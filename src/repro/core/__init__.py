@@ -1,0 +1,52 @@
+"""The paper's contribution: blockwise parallel decoding.
+
+Import order matters: ``heads`` must load before ``decode`` (models.model
+imports repro.core.heads while repro.core is still initializing).
+"""
+from repro.core import heads as heads  # noqa: F401  (must be first)
+from repro.core.heads import (
+    head_apply_dynamic,
+    head_apply_single,
+    heads_apply,
+    heads_init,
+)
+from repro.core.verify import accepted_block_size, position_accepts
+from repro.core.decode import (
+    Backend,
+    BPDState,
+    bpd_decode,
+    bpd_iteration,
+    bpd_prefill_causal_lm,
+    causal_lm_backend,
+    greedy_decode,
+    seq2seq_backend,
+)
+from repro.core.train import (
+    lm_loss,
+    loss_fn_for,
+    masked_prediction_loss,
+    seq2seq_loss,
+    softmax_xent,
+)
+
+__all__ = [
+    "Backend",
+    "BPDState",
+    "accepted_block_size",
+    "bpd_decode",
+    "bpd_iteration",
+    "bpd_prefill_causal_lm",
+    "causal_lm_backend",
+    "greedy_decode",
+    "head_apply_dynamic",
+    "head_apply_single",
+    "heads_apply",
+    "heads_init",
+    "lm_loss",
+    "loss_fn_for",
+    "masked_prediction_loss",
+    "position_accepts",
+    "seq2seq_backend",
+    "seq2seq_loss",
+    "softmax_xent",
+]

@@ -1,0 +1,323 @@
+"""Blockwise parallel decoding (paper §3–§5) and the greedy baseline.
+
+The combined scoring/proposal formulation (§4) is used throughout: one model
+invocation per iteration serves simultaneously as the verification of the
+current block and the prediction of the next block, so decoding an output of
+length m costs (m / mean-k̂) + 1 invocations instead of m.
+
+The loop is a ``jax.lax.while_loop`` with fully static shapes; per-row
+accepted block sizes k̂ let every batch row advance at its own rate.
+
+Model-agnostic: a ``Backend`` bundles the embed / decode-block / head-logits
+functions, with adapters for the decoder-only CausalLM and the paper's
+encoder-decoder MT model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DecodeConfig, ModelConfig
+from repro.core.verify import accepted_block_size, position_accepts
+from repro.models import model as model_lib
+from repro.models import seq2seq as seq2seq_lib
+from repro.models.layers import embed_apply
+
+
+class Backend(NamedTuple):
+    """Model functions the BPD engine needs."""
+
+    embed_tokens: Callable          # (params, tokens (B,S)) -> (B,S,d)
+    decode_block: Callable          # (params, h, caches, length) -> (hidden, staged_caches)
+    commit: Callable                # (caches, khat) -> caches
+    head_logits: Callable           # (params, hidden) -> (..., k, V)
+
+
+def causal_lm_backend(cfg: ModelConfig, *, kv_chunk: int = 0) -> Backend:
+    return Backend(
+        embed_tokens=lambda p, t: embed_apply(p["embed"], t).astype(cfg.compute_dtype),
+        decode_block=lambda p, h, c, ln: model_lib.decode_block_step(
+            p, cfg, h, c, ln, kv_chunk=kv_chunk),
+        commit=lambda c, kh: model_lib.commit_caches(cfg, c, kh),
+        head_logits=lambda p, h: model_lib.all_head_logits(p, cfg, h),
+    )
+
+
+def seq2seq_backend(cfg: ModelConfig, enc_kvs, enc_mask=None) -> Backend:
+    return Backend(
+        embed_tokens=lambda p, t: embed_apply(p["embed"], t).astype(cfg.compute_dtype),
+        decode_block=lambda p, h, c, ln: seq2seq_lib.decode_block_step(
+            p, cfg, h, c, ln, enc_kvs, enc_mask),
+        commit=lambda c, kh: model_lib.commit_caches(cfg, c, kh),
+        head_logits=lambda p, h: seq2seq_lib.all_head_logits(p, cfg, h),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One BPD iteration (predict+verify merged — paper §4, Fig. 2)
+# ---------------------------------------------------------------------------
+
+
+class BPDState(NamedTuple):
+    tokens: jnp.ndarray        # (B, buf) generated+prompt token buffer
+    text_len: jnp.ndarray      # (B,) tokens valid in the buffer
+    proposals: jnp.ndarray     # (B, k) next block proposals
+    caches: Any                # per-layer cache pytree
+    finished: jnp.ndarray      # (B,) bool
+    iters: jnp.ndarray         # () int32 — model invocations in the loop
+    generated: jnp.ndarray     # (B,) int32 — accepted tokens so far
+
+
+def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
+                  backend: Backend, state: BPDState, *,
+                  prefix_offset: int, prompt_len, max_new: int) -> BPDState:
+    """One combined predict/verify/accept step."""
+    block_k = dec.block_k or cfg.bpd_k
+    b = state.proposals.shape[0]
+    pos_len = state.text_len + prefix_offset
+
+    # ---- parallel scoring of the k proposals (verify ∧ next-predict) ------
+    h = backend.embed_tokens(params, state.proposals)
+    hidden, staged = backend.decode_block(params, h, state.caches, pos_len)
+    logits = backend.head_logits(params, hidden)            # (B, k, K, V)
+    logits = logits[:, :, :block_k, :]
+    p1_logits = logits[:, :, 0, :]
+
+    # ---- verify ------------------------------------------------------------
+    accepts = position_accepts(state.proposals, p1_logits, dec)
+    remaining = jnp.maximum(max_new - state.generated, 1)
+    khat = accepted_block_size(accepts, dec, remaining)     # (B,) in [1, k]
+    khat = jnp.where(state.finished, 0, khat)
+
+    # ---- EOS handling -------------------------------------------------------
+    if dec.eos_id >= 0:
+        pos_in_block = jnp.arange(block_k, dtype=jnp.int32)[None, :]
+        iseos = (state.proposals == dec.eos_id) & (pos_in_block < khat[:, None])
+        has_eos = jnp.any(iseos, axis=1)
+        first_eos = jnp.argmax(iseos, axis=1)
+        khat = jnp.where(has_eos, first_eos + 1, khat)
+    else:
+        has_eos = jnp.zeros((b,), bool)
+
+    # ---- accept -------------------------------------------------------------
+    widx = state.text_len[:, None] + jnp.arange(block_k, dtype=jnp.int32)[None, :]
+    wmask = jnp.arange(block_k, dtype=jnp.int32)[None, :] < khat[:, None]
+
+    def row_write(buf, idx, vals, m):
+        old = buf[idx]
+        return buf.at[idx].set(jnp.where(m, vals, old))
+
+    tokens = jax.vmap(row_write)(state.tokens, widx, state.proposals, wmask)
+    caches = backend.commit(staged, khat)
+    generated = state.generated + khat
+    finished = state.finished | has_eos | (generated >= max_new)
+
+    # ---- next-block proposals (already computed by this invocation) --------
+    head_argmax = jnp.argmax(logits, axis=-1)               # (B, k, K)
+    slot = jnp.maximum(khat - 1, 0)[:, None, None]
+    proposals = jnp.take_along_axis(head_argmax, slot, axis=1)[:, 0, :]
+    proposals = jnp.where(state.finished[:, None], state.proposals, proposals)
+
+    return BPDState(
+        tokens=tokens,
+        text_len=state.text_len + khat,
+        proposals=proposals,
+        caches=caches,
+        finished=finished,
+        iters=state.iters + 1,
+        generated=generated,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Full decode: prefill + while_loop over iterations
+# ---------------------------------------------------------------------------
+
+
+def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
+                          batch: Dict, *, max_new: int, kv_chunk: int = 0):
+    """Prefill the caches from the prompt and produce the first proposals."""
+    block_k = dec.block_k or cfg.bpd_k
+    prompt = batch["tokens"]
+    b, prompt_len = prompt.shape
+    prefix = model_lib.prefix_len(cfg, batch)
+    context_len = prefix + prompt_len + max_new
+    caches = model_lib.init_caches(cfg, b, context_len, block_k)
+
+    h = model_lib.embed_inputs(params, cfg, batch)          # (B, prefix+P, d)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    hidden, _, caches = model_lib.forward_hidden(
+        params, cfg, h, positions=positions, caches=caches, kv_chunk=kv_chunk,
+        moe_full_capacity=True)
+    last = hidden[:, -1, :]                                 # context = full prompt
+    logits = model_lib.all_head_logits(params, cfg, last)   # (B, K, V)
+    proposals = jnp.argmax(logits[:, :block_k, :], axis=-1)
+
+    buf = prompt_len + max_new + block_k
+    tokens = jnp.zeros((b, buf), jnp.int32)
+    tokens = tokens.at[:, :prompt_len].set(prompt)
+    state = BPDState(
+        tokens=tokens,
+        text_len=jnp.full((b,), prompt_len, jnp.int32),
+        proposals=proposals,
+        caches=caches,
+        finished=jnp.zeros((b,), bool),
+        iters=jnp.zeros((), jnp.int32),
+        generated=jnp.zeros((b,), jnp.int32),
+    )
+    return state, prefix
+
+
+def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
+               backend: Optional[Backend] = None, kv_chunk: int = 0
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """Full blockwise parallel decode for the decoder-only model.
+
+    Returns (tokens (B, buf), stats).  stats["mean_accepted"] is the paper's
+    headline metric; stats["invocations"] counts model calls (prefill + loop).
+    """
+    max_new = dec.max_new_tokens
+    state, prefix = bpd_prefill_causal_lm(params, cfg, dec, batch,
+                                          max_new=max_new, kv_chunk=kv_chunk)
+    prompt_len = batch["tokens"].shape[1]
+    be = backend or causal_lm_backend(cfg, kv_chunk=kv_chunk)
+
+    def cond(s: BPDState):
+        return (~jnp.all(s.finished)) & (s.iters < max_new)
+
+    def body(s: BPDState):
+        return bpd_iteration(params, cfg, dec, be, s,
+                             prefix_offset=prefix, prompt_len=prompt_len,
+                             max_new=max_new)
+
+    final = jax.lax.while_loop(cond, body, state)
+    stats = {
+        "iterations": final.iters,
+        "generated": final.generated,
+        "mean_accepted": jnp.sum(final.generated)
+        / jnp.maximum(final.iters, 1) / final.generated.shape[0],
+        "invocations": final.iters + 1,
+        "text_len": final.text_len,
+    }
+    return final.tokens, stats
+
+
+# ---------------------------------------------------------------------------
+# Seq2seq decode (the paper's MT experiments): encode once, BPD the decoder.
+# ---------------------------------------------------------------------------
+
+
+def bpd_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
+                       batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {"src": (B, Ss)}.  Decoder stream: BOS (token 0) + output."""
+    max_new = dec.max_new_tokens
+    block_k = dec.block_k or cfg.bpd_k
+    src = batch["src"]
+    b = src.shape[0]
+    enc_kvs, enc_mask = seq2seq_lib.encode(params, cfg, src)
+    be = seq2seq_backend(cfg, enc_kvs, enc_mask)
+
+    context_len = 1 + max_new
+    caches = seq2seq_lib.init_caches(cfg, b, context_len, block_k)
+    bos = jnp.zeros((b, 1), jnp.int32)
+    hidden, caches = seq2seq_lib.forward_hidden(params, cfg, bos, enc_kvs,
+                                                enc_mask=enc_mask,
+                                                caches=caches)
+    logits = seq2seq_lib.all_head_logits(params, cfg, hidden[:, -1, :])
+    proposals = jnp.argmax(logits[:, :block_k, :], axis=-1)
+
+    buf = 1 + max_new + block_k
+    tokens = jnp.zeros((b, buf), jnp.int32)
+    state = BPDState(
+        tokens=tokens,
+        text_len=jnp.ones((b,), jnp.int32),  # BOS occupies position 0
+        proposals=proposals,
+        caches=caches,
+        finished=jnp.zeros((b,), bool),
+        iters=jnp.zeros((), jnp.int32),
+        generated=jnp.zeros((b,), jnp.int32),
+    )
+
+    def cond(s: BPDState):
+        return (~jnp.all(s.finished)) & (s.iters < max_new)
+
+    def body(s: BPDState):
+        return bpd_iteration(params, cfg, dec, be, s, prefix_offset=0,
+                             prompt_len=1, max_new=max_new)
+
+    final = jax.lax.while_loop(cond, body, state)
+    stats = {
+        "iterations": final.iters,
+        "generated": final.generated,
+        "mean_accepted": jnp.sum(final.generated)
+        / jnp.maximum(final.iters, 1) / b,
+        "invocations": final.iters + 1,
+        "text_len": final.text_len,
+    }
+    return final.tokens[:, 1:], stats  # strip BOS
+
+
+def greedy_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
+                          batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Greedy baseline via BPD machinery with block size 1 (p_1 only)."""
+    return bpd_decode_seq2seq(params, cfg, dec.replace(block_k=1), batch)
+
+
+# ---------------------------------------------------------------------------
+# Greedy baseline (paper §2) — identical machinery with block size 1,
+# scoring only p_1 (no head overhead), for fair wall-clock comparisons.
+# ---------------------------------------------------------------------------
+
+
+def greedy_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
+                  kv_chunk: int = 0) -> Tuple[jnp.ndarray, Dict]:
+    max_new = dec.max_new_tokens
+    prompt = batch["tokens"]
+    b, prompt_len = prompt.shape
+    prefix = model_lib.prefix_len(cfg, batch)
+    context_len = prefix + prompt_len + max_new
+    caches = model_lib.init_caches(cfg, b, context_len, 1)
+
+    h = model_lib.embed_inputs(params, cfg, batch)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    hidden, _, caches = model_lib.forward_hidden(
+        params, cfg, h, positions=positions, caches=caches, kv_chunk=kv_chunk,
+        moe_full_capacity=True)
+    logits = model_lib.base_logits(params, cfg, hidden[:, -1, :])
+    next_tok = jnp.argmax(logits, axis=-1)                   # (B,)
+
+    buf = prompt_len + max_new + 1
+    tokens = jnp.zeros((b, buf), jnp.int32).at[:, :prompt_len].set(prompt)
+
+    def cond(s):
+        tokens, text_len, tok, caches, finished, steps = s
+        return (~jnp.all(finished)) & (steps < max_new)
+
+    def body(s):
+        tokens, text_len, tok, caches, finished, steps = s
+        adv = (~finished).astype(jnp.int32)
+        tokens = jax.vmap(lambda bu, i, v, m: bu.at[i].set(
+            jnp.where(m, v, bu[i])))(tokens, text_len, tok, ~finished)
+        h = embed_apply(params["embed"], tok[:, None]).astype(cfg.compute_dtype)
+        hidden, staged = model_lib.decode_block_step(
+            params, cfg, h, caches, text_len + prefix, kv_chunk=kv_chunk)
+        caches = model_lib.commit_caches(cfg, staged, adv)
+        logits = model_lib.base_logits(params, cfg, hidden[:, 0, :])
+        new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        text_len = text_len + adv
+        if dec.eos_id >= 0:
+            finished = finished | (tok == dec.eos_id)
+        finished = finished | (text_len - prompt_len >= max_new)
+        tok = jnp.where(finished, tok, new_tok)
+        return (tokens, text_len, tok, caches, finished, steps + 1)
+
+    init = (tokens, jnp.full((b,), prompt_len, jnp.int32),
+            next_tok.astype(jnp.int32), caches, jnp.zeros((b,), bool),
+            jnp.zeros((), jnp.int32))
+    tokens, text_len, _, _, _, steps = jax.lax.while_loop(cond, body, init)
+    stats = {"iterations": steps, "invocations": steps + 1,
+             "generated": text_len - prompt_len, "text_len": text_len}
+    return tokens, stats

@@ -1,0 +1,38 @@
+"""Sequence-level knowledge distillation (paper §6.2).
+
+The paper distills with beam-4 decodes from a same-architecture teacher; in
+this offline container we distill with greedy teacher decodes — the effect
+the paper relies on ("greater predictability due to consistent mode breaking
+from the teacher") is produced by any deterministic teacher decode.  The
+deviation is recorded in DESIGN.md §9.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DecodeConfig, ModelConfig
+from repro.core.decode import greedy_decode
+
+
+def distill_lm_batches(teacher_params, cfg: ModelConfig, batches: Iterable[Dict],
+                       *, prompt_len: int, max_new: int) -> List[Dict]:
+    """Replace the continuation of each batch's token stream with the
+    teacher's greedy continuation of its prompt prefix.
+
+    Input batches: {"tokens": (B, S)}.  Output: same structure, where
+    tokens[:, prompt_len:] come from the teacher.
+    """
+    dec = DecodeConfig(max_new_tokens=max_new, block_k=1, eos_id=-1)
+    fn = jax.jit(lambda b: greedy_decode(teacher_params, cfg, dec, b))
+    out = []
+    for batch in batches:
+        prompts = batch["tokens"][:, :prompt_len]
+        toks, _ = fn({"tokens": prompts})
+        s = batch["tokens"].shape[1]
+        new = np.asarray(toks[:, :s])
+        out.append(dict(batch, tokens=jnp.asarray(new)))
+    return out

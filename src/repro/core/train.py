@@ -1,0 +1,216 @@
+"""Training for the combined scoring/proposal model (paper §6).
+
+Key paper mechanics reproduced:
+
+* **Random sub-loss selection** — the mean of the k head cross-entropies is
+  too memory-hungry at training time, so one head is sampled uniformly per
+  minibatch, giving an unbiased estimate of the full loss.  (``head_loss =
+  "mean"`` is also provided for small models / ablations.)
+* **Frozen vs fine-tuned base (§6.1)** — with ``freeze_base=True`` the trunk
+  hidden states are stop-gradient'ed and the optimizer masks every parameter
+  outside ``bpd_heads``, so the original model's quality is exactly retained.
+  Head 0 is the identity (p_1 = base model), so frozen training samples the
+  head index from {1..k-1}.
+* Aux losses: MoE load-balance + router-z (weighted per config), logit
+  z-loss, optional label smoothing.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.core.heads import head_apply_dynamic
+from repro.models import model as model_lib
+from repro.models import seq2seq as seq2seq_lib
+
+
+def softmax_xent(logits, targets, *, mask=None, label_smoothing=0.0,
+                 z_loss=0.0):
+    """logits (..., V), targets (...,) int32; returns (loss, metrics)."""
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    logp_t = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0] - logz
+    nll = -logp_t
+    if label_smoothing:
+        smooth = -(jnp.mean(logits, axis=-1) - logz)
+        nll = (1 - label_smoothing) * nll + label_smoothing * smooth
+    if z_loss:
+        nll = nll + z_loss * jnp.square(logz)
+    if mask is None:
+        mask = jnp.ones(nll.shape, jnp.float32)
+    mask = jnp.broadcast_to(mask.astype(jnp.float32), nll.shape)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == targets) * mask) / denom
+    return loss, {"nll": loss, "accuracy": acc}
+
+
+def _head_logits_for(params, cfg: ModelConfig, hidden, head_idx,
+                     freeze_base: bool, detach_residual: bool = False):
+    """Logits of one (traced-index) head over the trunk hidden states."""
+    if freeze_base:
+        hidden = jax.lax.stop_gradient(hidden)
+    if not cfg.bpd_enabled:          # plain LM pre-training (no heads yet)
+        return model_lib.project_vocab(params, cfg, hidden)
+    h = head_apply_dynamic(params["bpd_heads"], cfg, hidden, head_idx,
+                           identity_p1=cfg.bpd_identity_p1,
+                           detach_residual=detach_residual)
+    return model_lib.project_vocab(params, cfg, h)
+
+
+def _sample_head(key, cfg: ModelConfig, tc: TrainConfig):
+    k = cfg.bpd_k
+    if tc.head_loss == "mean" or not cfg.bpd_enabled:
+        return None
+    lo = 1 if (tc.freeze_base and cfg.bpd_identity_p1) else 0
+    return jax.random.randint(key, (), lo, k)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, cfg: ModelConfig, tc: TrainConfig, batch: Dict, key
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """batch: tokens (B, S) [+ patch_embeds / frame_embeds per modality].
+
+    Head i (0-based) predicts position t+1+i from the hidden state at t.
+    """
+    tokens = batch["tokens"]
+    h = model_lib.embed_inputs(params, cfg, batch)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    hidden, moe_metrics, _ = model_lib.forward_hidden(params, cfg, h,
+                                                      positions=positions)
+    prefix = model_lib.prefix_len(cfg, batch)
+    hidden = hidden[:, prefix:, :]                      # text positions only
+    b, s, _ = hidden.shape
+
+    if cfg.bpd_enabled and tc.head_loss == "random":
+        head_idx = _sample_head(key, cfg, tc)
+        logits = _head_logits_for(params, cfg, hidden, head_idx,
+                                  tc.freeze_base, tc.detach_head_residual)
+        # targets for head i at position t: tokens[t+1+i]
+        offs = head_idx + 1
+        tpos = jnp.arange(s, dtype=jnp.int32)[None, :] + offs
+        tpos_c = jnp.minimum(tpos, s - 1)
+        targets = jnp.take_along_axis(tokens, tpos_c, axis=1)
+        mask = (tpos < s).astype(jnp.float32)
+        loss, m = softmax_xent(logits, targets, mask=mask,
+                               label_smoothing=tc.label_smoothing,
+                               z_loss=tc.z_loss)
+        m["head_idx"] = head_idx.astype(jnp.float32)
+    else:
+        # mean over heads (small-model / oracle mode) or plain LM (no BPD)
+        nheads = cfg.bpd_k if cfg.bpd_enabled else 1
+        total, m = 0.0, {}
+        for i in range(nheads):
+            logits = _head_logits_for(params, cfg, hidden, jnp.asarray(i),
+                                      tc.freeze_base,
+                                      tc.detach_head_residual)
+            tpos = jnp.arange(s, dtype=jnp.int32)[None, :] + (i + 1)
+            tpos_c = jnp.minimum(tpos, s - 1)
+            targets = jnp.take_along_axis(tokens, tpos_c, axis=1)
+            mask = (tpos < s).astype(jnp.float32)
+            li, mi = softmax_xent(logits, targets, mask=mask,
+                                  label_smoothing=tc.label_smoothing,
+                                  z_loss=tc.z_loss)
+            total = total + li / nheads
+            if i == 0:
+                m = mi
+        loss = total
+
+    for name, val in moe_metrics.items():
+        m[name] = val
+        if name == "moe_aux_loss":
+            loss = loss + cfg.router_aux_coef * val
+        if name == "moe_z_loss":
+            loss = loss + cfg.router_z_coef * val
+    m["loss"] = loss
+    return loss, m
+
+
+# ---------------------------------------------------------------------------
+# Encoder-only masked prediction (hubert)
+# ---------------------------------------------------------------------------
+
+
+def masked_prediction_loss(params, cfg: ModelConfig, tc: TrainConfig,
+                           batch: Dict, key) -> Tuple[jnp.ndarray, Dict]:
+    """batch: frame_embeds (B,S,d), mask (B,S) bool, targets (B,S) int32."""
+    h = model_lib.embed_inputs(params, cfg, batch)      # applies mask_embed
+    hidden, _, _ = model_lib.forward_hidden(params, cfg, h, bidirectional=True)
+    logits = model_lib.project_vocab(params, cfg, hidden)
+    loss, m = softmax_xent(logits, batch["targets"],
+                           mask=batch["mask"].astype(jnp.float32),
+                           z_loss=tc.z_loss)
+    m["loss"] = loss
+    return loss, m
+
+
+# ---------------------------------------------------------------------------
+# Seq2seq (paper MT) loss
+# ---------------------------------------------------------------------------
+
+
+def seq2seq_loss(params, cfg: ModelConfig, tc: TrainConfig, batch: Dict, key
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """batch: src (B,Ss), tgt (B,St); teacher forcing with BOS-shifted tgt."""
+    src, tgt = batch["src"], batch["tgt"]
+    enc_kvs, _ = seq2seq_lib.encode(params, cfg, src)
+    bos = jnp.zeros((tgt.shape[0], 1), tgt.dtype)
+    dec_in = jnp.concatenate([bos, tgt[:, :-1]], axis=1)
+    hidden, _ = seq2seq_lib.forward_hidden(params, cfg, dec_in, enc_kvs)
+    b, s, _ = hidden.shape
+
+    if cfg.bpd_enabled and tc.head_loss == "random":
+        head_idx = _sample_head(key, cfg, tc)
+        logits = _head_logits_for(params, cfg, hidden, head_idx,
+                                  tc.freeze_base, tc.detach_head_residual)
+        offs = head_idx  # dec_in position t sees tgt[<t]; head i predicts tgt[t+i]
+        tpos = jnp.arange(s, dtype=jnp.int32)[None, :] + offs
+        tpos_c = jnp.minimum(tpos, s - 1)
+        targets = jnp.take_along_axis(tgt, tpos_c, axis=1)
+        mask = (tpos < s).astype(jnp.float32)
+        if "tgt_mask" in batch:
+            mask = mask * jnp.take_along_axis(
+                batch["tgt_mask"].astype(jnp.float32), tpos_c, axis=1)
+        loss, m = softmax_xent(logits, targets, mask=mask,
+                               label_smoothing=tc.label_smoothing,
+                               z_loss=tc.z_loss)
+        m["head_idx"] = head_idx.astype(jnp.float32)
+    else:
+        nheads = cfg.bpd_k if cfg.bpd_enabled else 1
+        total, m = 0.0, {}
+        for i in range(nheads):
+            logits = _head_logits_for(params, cfg, hidden, jnp.asarray(i),
+                                      tc.freeze_base,
+                                      tc.detach_head_residual)
+            tpos = jnp.arange(s, dtype=jnp.int32)[None, :] + i
+            tpos_c = jnp.minimum(tpos, s - 1)
+            targets = jnp.take_along_axis(tgt, tpos_c, axis=1)
+            mask = (tpos < s).astype(jnp.float32)
+            if "tgt_mask" in batch:
+                mask = mask * jnp.take_along_axis(
+                    batch["tgt_mask"].astype(jnp.float32), tpos_c, axis=1)
+            li, mi = softmax_xent(logits, targets, mask=mask,
+                                  label_smoothing=tc.label_smoothing,
+                                  z_loss=tc.z_loss)
+            total = total + li / nheads
+            if i == 0:
+                m = mi
+        loss = total
+    m["loss"] = loss
+    return loss, m
+
+
+def loss_fn_for(cfg: ModelConfig) -> Callable:
+    if cfg.is_encoder_only:
+        return masked_prediction_loss
+    if cfg.is_encoder_decoder:
+        return seq2seq_loss
+    return lm_loss

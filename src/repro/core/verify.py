@@ -1,0 +1,62 @@
+"""Verification criteria (paper §3 exact match, §5.1 top-k, §5.2 distance,
+§5.3 minimum block size).
+
+Index convention for one BPD iteration (0-based within the block):
+  * ``proposals[:, i]`` is the token proposed for absolute position j+1+i.
+  * The verify forward feeds the k proposals; its p_1 output at block slot
+    i covers context ŷ_{≤ j+1+i}, i.e. it is the greedy distribution for
+    position j+2+i.
+  * proposals[:, 0] was p_1's own argmax from the previous iteration — it is
+    accepted unconditionally (paper: k̂ ≥ 1).
+  * proposals[:, i] for i ≥ 1 is checked against the p_1 output at slot i-1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DecodeConfig
+
+
+def position_accepts(proposals: jnp.ndarray, p1_logits: jnp.ndarray,
+                     dec: DecodeConfig) -> jnp.ndarray:
+    """Per-position acceptance decisions (before the prefix AND).
+
+    proposals : (B, k) int32
+    p1_logits : (B, k, V) — p_1 logits at block slots 0..k-1
+    returns   : (B, k) bool; column 0 is always True.
+    """
+    b, k = proposals.shape
+    # slot i-1 verifies proposal i
+    ver_logits = p1_logits[:, : k - 1, :]                      # (B, k-1, V)
+    cand = proposals[:, 1:]                                    # (B, k-1)
+
+    if dec.criterion == "exact":
+        greedy = jnp.argmax(ver_logits, axis=-1)
+        ok = cand == greedy
+    elif dec.criterion == "topk":
+        _, top_ids = jax.lax.top_k(ver_logits, dec.top_k)      # (B, k-1, topk)
+        ok = jnp.any(top_ids == cand[..., None], axis=-1)
+    elif dec.criterion == "distance":
+        greedy = jnp.argmax(ver_logits, axis=-1)
+        ok = jnp.abs(cand - greedy) <= dec.epsilon
+    else:
+        raise ValueError(dec.criterion)
+
+    first = jnp.ones((b, 1), bool)
+    return jnp.concatenate([first, ok], axis=1)
+
+
+def accepted_block_size(accepts: jnp.ndarray, dec: DecodeConfig,
+                        remaining: jnp.ndarray) -> jnp.ndarray:
+    """k̂ per row: longest accepted prefix, with §5.3 minimum block size,
+    clamped to the tokens still allowed (``remaining``, (B,) int32).
+
+    accepts: (B, k) bool -> (B,) int32 in [1, k] (before remaining clamp).
+    """
+    prefix = jnp.cumprod(accepts.astype(jnp.int32), axis=1)
+    khat = jnp.sum(prefix, axis=1)
+    if dec.min_block > 1:
+        k = accepts.shape[1]
+        khat = jnp.maximum(khat, min(dec.min_block, k))
+    return jnp.maximum(jnp.minimum(khat, remaining), 1)

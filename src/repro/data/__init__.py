@@ -1,0 +1,13 @@
+from repro.data.pipeline import prefetch, stub_frontend_inputs, take, to_device
+from repro.data.synthetic import CipherMT, MarkovLM, MaskedFrames, OrdinalCurves
+
+__all__ = [
+    "CipherMT",
+    "MarkovLM",
+    "MaskedFrames",
+    "OrdinalCurves",
+    "prefetch",
+    "stub_frontend_inputs",
+    "take",
+    "to_device",
+]

@@ -1,0 +1,56 @@
+"""Batching / sharding pipeline.
+
+Host-side numpy batches -> device arrays, with optional sharding onto a mesh
+(batch dim over the data axis).  Includes a deterministic prefetching
+iterator and helpers to build the per-modality stub inputs (the VLM patch /
+audio frame embeddings mandated as stubs by the brief).
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+def to_device(batch: Dict[str, np.ndarray], sharding=None) -> Dict:
+    def put(x):
+        if sharding is not None:
+            return jax.device_put(x, sharding)
+        return jnp.asarray(x)
+
+    return {k: put(v) for k, v in batch.items()}
+
+
+def prefetch(it: Iterator[Dict], depth: int = 2, sharding=None) -> Iterator[Dict]:
+    """Simple synchronous-transfer prefetch queue (CPU container: the value
+    is overlap of host batch synthesis with device compute)."""
+    queue: collections.deque = collections.deque()
+    for batch in it:
+        queue.append(to_device(batch, sharding))
+        if len(queue) >= depth:
+            yield queue.popleft()
+    while queue:
+        yield queue.popleft()
+
+
+def stub_frontend_inputs(cfg: ModelConfig, rng: np.random.Generator,
+                         batch: int, text_len: int) -> Dict[str, np.ndarray]:
+    """Per the brief, modality frontends are stubs: precomputed patch/frame
+    embeddings of the right shape."""
+    out: Dict[str, np.ndarray] = {}
+    if cfg.modality == "vision_text" and cfg.num_patch_tokens:
+        out["patch_embeds"] = rng.normal(
+            size=(batch, cfg.num_patch_tokens, cfg.d_model)).astype(np.float32)
+    out["tokens"] = rng.integers(0, cfg.vocab_size,
+                                 (batch, text_len)).astype(np.int32)
+    return out
+
+
+def take(it: Iterator, n: int):
+    return list(itertools.islice(it, n))

@@ -1,0 +1,195 @@
+"""Synthetic tasks, chosen so the paper's acceptance-rate phenomenology is
+reproducible on CPU in minutes:
+
+* **Markov LM** — an order-2 Markov chain over a small vocab with a
+  temperature knob: low-entropy chains are highly predictable, so trained
+  BPD heads accept long blocks (the paper's "distilled data is more
+  predictable" effect, in a dial we control).
+* **Cipher MT** — the seq2seq analog of WMT: the target is the source under
+  a fixed token substitution + reversal.  Deterministic given the source, so
+  a converged model approaches k̂ → k, while an underfit one shows the
+  paper's Table-1-style intermediate block sizes.
+* **Ordinal sequences** — smooth integer-valued curves quantized into
+  [0, 256) tokens: the "image" analog where distance-based acceptance
+  (paper §5.2, Table 2) is meaningful.
+* **Masked audio frames** — random frame embeddings + span masks + codebook
+  targets for the hubert masked-prediction objective.
+
+Everything is generated from numpy PRNGs with explicit seeds.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Markov LM
+# ---------------------------------------------------------------------------
+
+
+class MarkovLM:
+    """Order-2 Markov chain over ``vocab`` symbols."""
+
+    def __init__(self, vocab: int = 64, *, seed: int = 0, temperature: float = 0.3):
+        rng = np.random.default_rng(seed)
+        logits = rng.normal(size=(vocab, vocab, vocab)) / max(temperature, 1e-3)
+        z = logits - logits.max(-1, keepdims=True)
+        p = np.exp(z)
+        self.trans = p / p.sum(-1, keepdims=True)
+        self.vocab = vocab
+
+    def sample(self, rng: np.random.Generator, batch: int, seq_len: int) -> np.ndarray:
+        toks = np.zeros((batch, seq_len), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, batch)
+        toks[:, 1] = rng.integers(0, self.vocab, batch)
+        for t in range(2, seq_len):
+            p = self.trans[toks[:, t - 2], toks[:, t - 1]]
+            cum = np.cumsum(p, axis=-1)
+            u = rng.random((batch, 1))
+            toks[:, t] = (u < cum).argmax(-1)
+        return toks
+
+    def batches(self, *, batch: int, seq_len: int, seed: int = 0
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        rng = np.random.default_rng(seed)
+        while True:
+            yield {"tokens": self.sample(rng, batch, seq_len)}
+
+
+# ---------------------------------------------------------------------------
+# Cipher MT (seq2seq)
+# ---------------------------------------------------------------------------
+
+
+class CipherMT:
+    """Target = reversed source mapped through a fixed permutation cipher."""
+
+    def __init__(self, vocab: int = 64, *, seed: int = 0, reverse: bool = True):
+        rng = np.random.default_rng(seed)
+        # token 0 is reserved for BOS/PAD; permute 1..vocab-1
+        perm = rng.permutation(np.arange(1, vocab))
+        self.cipher = np.concatenate([[0], perm]).astype(np.int32)
+        self.vocab = vocab
+        self.reverse = reverse
+
+    def make_pair(self, rng: np.random.Generator, batch: int, src_len: int):
+        src = rng.integers(1, self.vocab, (batch, src_len)).astype(np.int32)
+        tgt = self.cipher[src]
+        if self.reverse:
+            tgt = tgt[:, ::-1]
+        return src, np.ascontiguousarray(tgt)
+
+    def batches(self, *, batch: int, src_len: int, seed: int = 0
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        rng = np.random.default_rng(seed)
+        while True:
+            src, tgt = self.make_pair(rng, batch, src_len)
+            yield {"src": src, "tgt": tgt}
+
+
+class PhraseMT:
+    """Seq2seq task with target-side subword structure: each source token
+    expands deterministically into an ``expand``-token target phrase.
+
+    This mirrors what makes the paper's MT heads work: real German targets
+    are sequences of subwords where continuations within a word/phrase are
+    locally predictable from the decoder's own context (the paper's §7.4
+    trace accepts blocks like "Tele-sko-p_" in one step), while phrase
+    boundaries require source information.  Pure cipher targets have zero
+    target-side redundancy, so proposal heads have nothing learnable from a
+    frozen decoder state; phrase targets restore the paper's regime.
+    """
+
+    def __init__(self, vocab: int = 64, *, expand: int = 2, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        # token 0 reserved; each source token maps to `expand` target tokens
+        self.table = rng.integers(1, vocab, (vocab, expand)).astype(np.int32)
+        self.vocab = vocab
+        self.expand = expand
+        self.reverse = False
+
+    def make_pair(self, rng: np.random.Generator, batch: int, src_len: int):
+        src = rng.integers(1, self.vocab, (batch, src_len)).astype(np.int32)
+        tgt = self.table[src].reshape(batch, src_len * self.expand)
+        return src, np.ascontiguousarray(tgt)
+
+    def gold(self, src: np.ndarray) -> np.ndarray:
+        return self.table[src].reshape(src.shape[0], -1)
+
+    def batches(self, *, batch: int, src_len: int, seed: int = 0
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        rng = np.random.default_rng(seed)
+        while True:
+            src, tgt = self.make_pair(rng, batch, src_len)
+            yield {"src": src, "tgt": tgt}
+
+
+# ---------------------------------------------------------------------------
+# Ordinal ("super-resolution") sequences
+# ---------------------------------------------------------------------------
+
+
+class OrdinalCurves:
+    """Token sequences quantizing smooth random curves into [0, levels)."""
+
+    def __init__(self, levels: int = 256, *, n_waves: int = 3, seed: int = 0):
+        self.levels = levels
+        self.n_waves = n_waves
+
+    def sample(self, rng: np.random.Generator, batch: int, seq_len: int) -> np.ndarray:
+        t = np.linspace(0, 1, seq_len)[None, :]
+        y = np.zeros((batch, seq_len))
+        for _ in range(self.n_waves):
+            freq = rng.uniform(0.5, 4.0, (batch, 1))
+            phase = rng.uniform(0, 2 * np.pi, (batch, 1))
+            amp = rng.uniform(0.2, 1.0, (batch, 1))
+            y += amp * np.sin(2 * np.pi * freq * t + phase)
+        y = (y - y.min(1, keepdims=True))
+        y = y / np.maximum(y.max(1, keepdims=True), 1e-9)
+        return np.clip((y * (self.levels - 1)).round(), 0,
+                       self.levels - 1).astype(np.int32)
+
+    def batches(self, *, batch: int, seq_len: int, seed: int = 0
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        rng = np.random.default_rng(seed)
+        while True:
+            yield {"tokens": self.sample(rng, batch, seq_len)}
+
+
+# ---------------------------------------------------------------------------
+# Masked audio frames (hubert-style)
+# ---------------------------------------------------------------------------
+
+
+class MaskedFrames:
+    """Frame embeddings whose codebook id is a deterministic function of the
+    frame (so the masked-prediction task is learnable): embedding = codeword
+    + small noise; target = codeword index."""
+
+    def __init__(self, d_model: int, codebook: int = 504, *, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.codebook = rng.normal(size=(codebook, d_model)).astype(np.float32)
+        self.nc = codebook
+        self.d = d_model
+
+    def sample(self, rng: np.random.Generator, batch: int, seq_len: int,
+               *, mask_prob: float = 0.08, span: int = 10):
+        ids = rng.integers(0, self.nc, (batch, seq_len))
+        emb = self.codebook[ids] + 0.1 * rng.normal(
+            size=(batch, seq_len, self.d)).astype(np.float32)
+        mask = np.zeros((batch, seq_len), bool)
+        n_starts = max(1, int(mask_prob * seq_len))
+        for b in range(batch):
+            starts = rng.integers(0, max(seq_len - span, 1), n_starts)
+            for s in starts:
+                mask[b, s:s + span] = True
+        return {"frame_embeds": emb.astype(np.float32),
+                "mask": mask, "targets": ids.astype(np.int32)}
+
+    def batches(self, *, batch: int, seq_len: int, seed: int = 0, **kw
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        rng = np.random.default_rng(seed)
+        while True:
+            yield self.sample(rng, batch, seq_len, **kw)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused BPD head FFN + vocab projection + running top-T.
+
+Verification (paper §3) needs only argmax / top-k token ids of p_1..p_k, not
+the logits themselves.  For the assigned archs the padded vocab reaches 256k
+(nemotron-4), so materializing the (B, k, V) logit tensor per BPD iteration
+would round-trip ~256k × k × 4B per row through HBM.  This kernel streams
+the vocabulary projection in ``block_v`` tiles through VMEM, keeping a
+running top-T (values, ids) carry per (row, head), and never writes logits
+to HBM — a beyond-paper TPU optimization recorded in EXPERIMENTS.md §Perf.
+
+Inputs are the *per-head decoder outputs* o = heads_apply(hidden) flattened
+to (N·K, d) (the head FFN is tiny — K × d × d_hidden — and runs as a plain
+XLA matmul; fusing it in would force the d_hidden working set into every
+vocab tile for no bandwidth win).
+
+Grid: (num_row_tiles, num_vocab_tiles); vocab axis sequential, carry in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fused_heads_kernel(o_ref, w_ref,                     # inputs
+                        val_ref, idx_ref,                 # outputs
+                        bval_ref, bidx_ref,               # scratch
+                        *, top_t: int, block_v: int, vocab: int):
+    vb = pl.program_id(1)
+
+    @pl.when(vb == 0)
+    def _init():
+        bval_ref[...] = jnp.full_like(bval_ref, NEG_INF)
+        bidx_ref[...] = jnp.zeros_like(bidx_ref)
+
+    o = o_ref[...].astype(jnp.float32)                    # (RN, d)
+    w = w_ref[...].astype(jnp.float32)                    # (d, block_v)
+    logits = jax.lax.dot_general(o, w, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    base = vb * block_v
+    lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) + base
+    logits = jnp.where(lane < vocab, logits, NEG_INF)     # mask vocab pad
+
+    tvals, tids = jax.lax.top_k(logits, top_t)            # (RN, T) tile-local
+    cand_v = jnp.concatenate([bval_ref[...], tvals], axis=1)
+    cand_i = jnp.concatenate([bidx_ref[...], tids + base], axis=1)
+    mvals, sel = jax.lax.top_k(cand_v, top_t)             # merge carry ∪ tile
+    bval_ref[...] = mvals
+    bidx_ref[...] = jnp.take_along_axis(cand_i, sel, axis=1)
+
+    @pl.when(vb == pl.num_programs(1) - 1)
+    def _finish():
+        val_ref[...] = bval_ref[...]
+        idx_ref[...] = bidx_ref[...]
+
+
+def fused_heads_topk_pallas(o, w_vocab, *, vocab: int, top_t: int = 4,
+                            block_rows: int = 256, block_v: int = 1024,
+                            interpret: bool = False):
+    """o: (N, d) per-head decoder outputs (rows = flattened (token, head));
+    w_vocab: (d, Vp) vocab projection (pre-transposed embed table if tied).
+
+    Returns (top_vals (N, top_t) f32, top_ids (N, top_t) i32) over the
+    *logical* vocab (pad lanes never win).
+    """
+    n, d = o.shape
+    vp = w_vocab.shape[1]
+    block_v = min(block_v, vp)
+    assert vp % block_v == 0, (vp, block_v)
+    rn = min(block_rows, max(8, ((n + 7) // 8) * 8))
+    n_pad = ((n + rn - 1) // rn) * rn
+    op = jnp.pad(o, ((0, n_pad - n), (0, 0)))
+
+    grid = (n_pad // rn, vp // block_v)
+    vals, ids = pl.pallas_call(
+        functools.partial(_fused_heads_kernel, top_t=top_t, block_v=block_v,
+                          vocab=vocab),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rn, d), lambda ri, vi: (ri, 0)),
+            pl.BlockSpec((d, block_v), lambda ri, vi: (0, vi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rn, top_t), lambda ri, vi: (ri, 0)),
+            pl.BlockSpec((rn, top_t), lambda ri, vi: (ri, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, top_t), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, top_t), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rn, top_t), jnp.float32),
+            pltpu.VMEM((rn, top_t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(op, w_vocab)
+    return vals[:n], ids[:n]

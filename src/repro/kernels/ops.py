@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in Pallas interpret mode, which
+runs the kernel body in Python/XLA per grid step — correct but slow, so the
+model stack uses the jnp paths by default and the kernels are exercised by
+tests/benchmarks and on real TPU backends (``use_kernels=True``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_attention import verify_attention_pallas
+from repro.kernels.fused_heads import fused_heads_topk_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "num_meta", "block_kv",
+                                             "interpret"))
+def verify_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                     num_meta: int = 0, block_kv: int = 512,
+                     interpret: bool | None = None):
+    """BPD verify-substep attention (see kernels.block_attention)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return verify_attention_pallas(q, k, v, q_pos, kv_pos, window=window,
+                                   num_meta=num_meta, block_kv=block_kv,
+                                   interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, logw, u, *, chunk: int = 16,
+               interpret: bool | None = None):
+    """Chunked RWKV-6 wkv scan (see kernels.rwkv6_scan)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return rwkv6_scan_pallas(r, k, v, logw, u, chunk=chunk, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("vocab", "top_t", "block_rows",
+                                             "block_v", "interpret"))
+def fused_heads_topk(o, w_vocab, *, vocab: int, top_t: int = 4,
+                     block_rows: int = 256, block_v: int = 1024,
+                     interpret: bool | None = None):
+    """Streaming head-logits top-T (see kernels.fused_heads)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return fused_heads_topk_pallas(o, w_vocab, vocab=vocab, top_t=top_t,
+                                   block_rows=block_rows, block_v=block_v,
+                                   interpret=interp)

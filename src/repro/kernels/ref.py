@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Self-contained (no imports from repro.models) so a kernel test failure
+unambiguously implicates the kernel, not the model stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# block_attention oracle
+# ---------------------------------------------------------------------------
+
+
+def verify_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                     num_meta: int = 0) -> jnp.ndarray:
+    """q: (B, kq, H, hd); k/v: (B, L, KV, hd); q_pos (B, kq); kv_pos (B, L)."""
+    b, kq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kq, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask &= (qp - kp < window) | (kp < num_meta)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgqs,bshk->bqhgk", probs, v.astype(jnp.float32))
+    return ctx.reshape(b, kq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6_scan oracle (sequential recurrence, f32)
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_scan(r, k, v, logw, u):
+    """r/k/v/logw: (B, S, H, D); u: (H, D).  Zero initial state.
+
+    Returns (y (B,S,H,D) f32, final_state (B,H,D,D) f32)."""
+    b, s, h, d = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                    # (B, H, D)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        yt = jnp.einsum("bhi,bhij->bhj", rt, S + uf[None, :, :, None] * kv)
+        return wt[..., None] * S + kv, yt
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    state0 = jnp.zeros((b, h, d, d), jnp.float32)
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+# ---------------------------------------------------------------------------
+# fused_heads oracle
+# ---------------------------------------------------------------------------
+
+
+def heads_topk(o, w_vocab, *, vocab: int, top_t: int = 4):
+    """o: (N, d); w_vocab: (d, Vp).  Full-logits top-T over logical vocab."""
+    logits = o.astype(jnp.float32) @ w_vocab.astype(jnp.float32)
+    lane = jnp.arange(logits.shape[-1])
+    logits = jnp.where(lane[None, :] < vocab, logits, NEG_INF)
+    vals, ids = jax.lax.top_k(logits, top_t)
+    return vals, ids.astype(jnp.int32)

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: chunked RWKV-6 ("Finch") wkv scan.
+
+The wkv recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+is sequential per timestep, but within a chunk of C timesteps it has a
+closed matmul form (the TPU-native adaptation — the recurrence becomes MXU
+work instead of C dependent matvecs):
+
+    a_t   = prod_{s<=t} w_s                      (cumulative decay, (C, D))
+    y_t   = (r_t ⊙ a_{t-1}) S_0
+            + sum_{s<t} ((r_t ⊙ a_{t-1}/a_s) · k_s) v_s
+            + ((r_t ⊙ u) · k_t) v_t
+    S_C   = diag(a_C) S_0 + (a_C ⊙ K~)^T V,   K~_s = k_s / a_s
+
+i.e. with R~ = r ⊙ shift(a), K~ = k / a:
+
+    y = (R~ @ S_0) + tril_strict(R~ @ K~^T) @ V + diag((r ⊙ u) · k) V
+
+All products are (C,D)x(D,D), (C,D)x(D,C), (C,C)x(C,D) matmuls.  The (D,D)
+state stays resident in VMEM scratch across the sequential chunk axis of the
+grid, so HBM traffic per chunk is just the r/k/v/w tiles + y tile.
+
+Numerics: 1/a_s can overflow when decay is strong, so chunks are short
+(C = 16 by default, as in flash-linear-attention) and exponents are clamped;
+contributions that would overflow are exactly those the decay has already
+annihilated downstream.
+
+Grid: (B, H, S // C) — last axis sequential on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LOG_CLAMP = 80.0  # exp(80) ~ 5e34, inside f32; valid terms never need it
+                  # unless a chunk decays by more than e^-160 per channel,
+                  # at which point the distorted contribution is ~0 anyway.
+
+
+def _rwkv6_chunk_kernel(r_ref, k_ref, v_ref, logw_ref, u_ref,   # inputs
+                        y_ref, sfin_ref,                        # outputs
+                        s_ref,                                  # scratch (D,D)
+                        *, chunk: int):
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)            # (C, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    logw = logw_ref[0, 0].astype(jnp.float32)      # (C, D) log-decay (<= 0)
+    u = u_ref[0].astype(jnp.float32)               # (1, D)
+    s0 = s_ref[...]                                # (D, D)
+
+    la = jnp.cumsum(logw, axis=0)                  # log a_t   (C, D), <= 0
+    la_prev = la - logw                            # log a_{t-1}
+    la_end = la[-1:, :]                            # (1, D)
+
+    # Per-channel midpoint renormalization: scores[t,s] needs
+    # exp(la_prev[t] - la[s]) which is <= 1 for every *valid* (s < t) pair,
+    # but neither factor alone is bounded.  Splitting at ref = la_end/2 makes
+    # both factors <= exp(|la_end|/2) per channel, and ref cancels exactly in
+    # the product, so valid entries are exact; invalid (s >= t) entries may
+    # saturate the clamp but are masked to zero below.
+    ref = 0.5 * la_end
+    r_t = r * jnp.exp(jnp.minimum(la_prev - ref, LOG_CLAMP))
+    k_t = k * jnp.exp(jnp.minimum(ref - la, LOG_CLAMP))
+
+    dot = lambda a, b, dims: jax.lax.dot_general(
+        a, b, (dims, ((), ())), preferred_element_type=jnp.float32)
+
+    scores = dot(r_t, k_t, ((1,), (1,)))           # (C, C)
+    c = scores.shape[0]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    scores = jnp.where(si < ti, scores, 0.0)       # strict causal (s < t)
+
+    diag = jnp.sum(r * u * k, axis=1, keepdims=True)            # (C, 1)
+    r_s0 = r * jnp.exp(la_prev)                    # exact, <= |r| per channel
+    y = dot(r_s0, s0, ((1,), (0,))) + dot(scores, v, ((1,), (0,))) + diag * v
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    k_in = k * jnp.exp(la_end - la)                # a_C/a_s <= 1 (bounded)
+    s_ref[...] = jnp.exp(la_end).T * s0 + dot(k_in, v, ((0,), (0,)))
+
+    @pl.when(cb == pl.num_programs(2) - 1)
+    def _finish():
+        sfin_ref[0, 0] = s_ref[...]
+
+
+def rwkv6_scan_pallas(r, k, v, logw, u, *, chunk: int = 16,
+                      interpret: bool = False):
+    """r/k/v/logw: (B, S, H, D); u: (H, D).  logw = -exp(w0 + lora) <= 0.
+
+    Returns (y (B, S, H, D) f32, final_state (B, H, D, D) f32) with zero
+    initial state (prefill/training semantics — decode keeps per-step states
+    on the jnp path for BPD rollback).
+    """
+    b, s, h, d = r.shape
+    c = min(chunk, s)
+    n = (s + c - 1) // c
+    pad = n * c - s
+
+    def prep(t, fill=0.0):
+        t = t.transpose(0, 2, 1, 3)                              # (B, H, S, D)
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                        constant_values=fill)
+        return t
+
+    rr, kk, vv = prep(r), prep(k), prep(v)
+    lw = prep(logw)                                # pad logw with 0 (w = 1)
+
+    grid = (b, h, n)
+    y, sfin = pl.pallas_call(
+        functools.partial(_rwkv6_chunk_kernel, chunk=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, d), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, d), lambda bi, hi, ci: (hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, d), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, n * c, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, lw, u)
+
+    y = y[:, :, :s, :].transpose(0, 2, 1, 3)                     # (B, S, H, D)
+    return y, sfin

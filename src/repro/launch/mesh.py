@@ -1,0 +1,36 @@
+"""Production mesh construction (TPU v5e pods).
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run must set
+XLA_FLAGS before anything initializes the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2×16×16 = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(mc: MeshConfig):
+    return jax.make_mesh(mc.shape, mc.axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants for roofline analysis (TPU v5e, per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link

@@ -1,0 +1,83 @@
+"""Serving launcher: restore a checkpoint and decode request batches with
+blockwise parallel decoding.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+        --ckpt-dir /tmp/ckpt --batch 4 --max-new 32 [--criterion topk --top-k 2]
+
+Runs the prefill + serve_step loop (the same entry points the multi-pod
+dry-run lowers) on the host devices with the reduced config.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore
+from repro.config import DecodeConfig, get_config
+from repro.core import decode as D
+from repro.data.synthetic import MarkovLM
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--block-k", type=int, default=0)
+    ap.add_argument("--criterion", default="exact",
+                    choices=["exact", "topk", "distance"])
+    ap.add_argument("--top-k", type=int, default=2)
+    ap.add_argument("--epsilon", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True).replace(dtype="float32")
+    if cfg.is_encoder_only:
+        raise SystemExit(f"{args.arch} is encoder-only — no decode path")
+    params = M.init(jax.random.PRNGKey(args.seed), cfg)
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        params, extra = restore(args.ckpt_dir, params)
+        print(f"[serve] restored step {latest_step(args.ckpt_dir)} "
+              f"({extra.get('arch')})")
+
+    dec = DecodeConfig(max_new_tokens=args.max_new,
+                       block_k=args.block_k or cfg.bpd_k,
+                       criterion=args.criterion, top_k=args.top_k,
+                       epsilon=args.epsilon)
+    task = MarkovLM(vocab=min(cfg.vocab_size, 256), temperature=0.2,
+                    seed=args.seed)
+    prompts = jnp.asarray(task.sample(np.random.default_rng(args.seed + 1),
+                                      args.batch, args.prompt_len))
+    batch = {"tokens": prompts}
+    if cfg.modality == "vision_text":
+        batch["patch_embeds"] = jnp.zeros((args.batch, 4, cfg.d_model),
+                                          jnp.float32)
+
+    fn = jax.jit(lambda b: D.bpd_decode(params, cfg, dec, b))
+    fn(batch)  # compile
+    t0 = time.time()
+    toks, stats = fn(batch)
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+
+    print(f"[serve] {args.batch} requests, {args.max_new} tokens each, "
+          f"criterion={args.criterion}")
+    print(f"[serve] mean accepted block size k̂ = "
+          f"{float(stats['mean_accepted']):.2f}  "
+          f"invocations = {int(stats['invocations'])} "
+          f"(greedy would need {args.max_new + 1})  wall = {dt * 1e3:.0f}ms")
+    for r in range(args.batch):
+        n = int(stats["text_len"][r])
+        out = [int(x) for x in np.asarray(toks[r, args.prompt_len:n])]
+        print(f"    row {r}: {out}")
+
+
+if __name__ == "__main__":
+    main()

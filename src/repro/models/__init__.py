@@ -1,0 +1,4 @@
+# Model substrate: layers, attention, MoE, RWKV6, Mamba, Hymba blocks,
+# decoder-only CausalLM (model.py), encoder-decoder (seq2seq.py).
+# Submodules are imported directly (repro.models.model, ...) to keep import
+# graphs acyclic; nothing is re-exported here.

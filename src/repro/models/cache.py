@@ -1,0 +1,70 @@
+"""Decode-time caches.
+
+All caches are plain dict pytrees so they thread through ``jax.lax.while_loop``
+and ``pjit`` unchanged.
+
+KV cache layout (per attention layer):
+    k, v : (batch, buf_len, kv_heads, head_dim)   post-RoPE keys
+    pos  : (buf_len,) int32                       absolute position held by slot
+                                                  (-1 = never written)
+
+The *model-level* current length (number of accepted tokens) lives outside the
+per-layer dicts (one scalar for the whole model).  Slot assignment is
+``slot = position % buf_len``; masking is computed from absolute positions, so
+blockwise-parallel-decoding rollback is simply "decrease the length": stale
+slots have ``pos >= length`` and are masked out until overwritten.
+
+For full attention, ``buf_len`` covers the whole context (seq_len + block
+slack).  For sliding-window attention, ``buf_len = window + block_k`` — the
+``+ block_k`` slack guarantees that speculative writes can never clobber a
+slot that is still inside the window after a rollback (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def attn_cache_init(batch: int, buf_len: int, kv_heads: int, head_dim: int, dtype) -> Dict:
+    return {
+        "k": jnp.zeros((batch, buf_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, buf_len, kv_heads, head_dim), dtype),
+        # per-row absolute positions: rows advance at different rates under
+        # blockwise parallel decoding (per-row accepted block sizes)
+        "pos": jnp.full((batch, buf_len), -1, jnp.int32),
+    }
+
+
+def mamba_cache_init(batch: int, d_inner: int, state_dim: int, conv_width: int, dtype) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, d_inner), dtype),
+        "h": jnp.zeros((batch, d_inner, state_dim), jnp.float32),
+    }
+
+
+def rwkv_cache_init(batch: int, d_model: int, num_heads: int, head_dim: int, dtype) -> Dict:
+    return {
+        "shift_tm": jnp.zeros((batch, d_model), dtype),   # time-mix token shift
+        "shift_cm": jnp.zeros((batch, d_model), dtype),   # channel-mix token shift
+        "state": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+    }
+
+
+def attn_buf_len(cfg: ModelConfig, layer_idx: int, context_len: int, block_k: int) -> int:
+    """Static KV buffer size for one attention layer.
+
+    Rounded up to a multiple of 256 so the buffer's *length* dim can shard
+    over the model axis (flash-decoding-style sequence sharding — used when
+    kv_heads doesn't divide the axis).  Extra slots hold pos = -1 and are
+    masked out, so padding is semantically free."""
+    window = cfg.sliding_window
+    if window and layer_idx not in cfg.global_attn_layers:
+        # meta tokens (hymba) are global: give them dedicated leading slots by
+        # folding them into the window budget.
+        n = min(context_len + block_k, window + cfg.num_meta_tokens + block_k)
+    else:
+        n = context_len + block_k
+    return ((n + 255) // 256) * 256

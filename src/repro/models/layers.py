@@ -1,0 +1,146 @@
+"""Shared building blocks: initializers, norms, activations, RoPE, MLPs."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Initializers (pure functions of a PRNG key; params are plain dict pytrees)
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, dtype=jnp.float32, scale: float = 1.0,
+               bias: bool = False):
+    std = scale / math.sqrt(in_dim)
+    p = {"w": jax.random.normal(key, (in_dim, out_dim), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def norm_init(dim: int, *, kind: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def norm_apply(p, x, *, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def group_norm_apply(p, x, num_groups: int, *, eps: float = 1e-5):
+    """GroupNorm over the channel dim (used by RWKV6 per-head ln_x)."""
+    *lead, c = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, num_groups, c // num_groups)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*lead, c)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":  # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {name}")
+
+
+GATED_ACTIVATIONS = ("silu", "geglu")  # use w1/w3 gated form
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense feed-forward; MoE lives in moe.py)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, *, d_ff: Optional[int] = None, dtype=jnp.float32):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], cfg.d_model, d_ff, dtype=dtype)}
+    if cfg.activation in GATED_ACTIVATIONS:
+        p["w3"] = dense_init(ks[1], cfg.d_model, d_ff, dtype=dtype)
+    p["w2"] = dense_init(ks[2], d_ff, cfg.d_model, dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, *, act: str):
+    h = dense_apply(p["w1"], x)
+    if "w3" in p:
+        h = activation("silu" if act == "geglu" else act, h) * dense_apply(p["w3"], x)
+    else:
+        h = activation(act, h)
+    return dense_apply(p["w2"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, dim: int, *, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, dim), dtype) * 0.02}
+
+
+def embed_apply(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed_apply(p, x):
+    """Tied unembedding: x @ table^T."""
+    return x @ p["table"].T.astype(x.dtype)

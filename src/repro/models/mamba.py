@@ -1,0 +1,153 @@
+"""Mamba-1 selective SSM (used by the Hymba hybrid block's SSM heads).
+
+h_t = exp(Δ_t A) ⊙ h_{t-1} + (Δ_t B_t) x_t ;  y_t = C_t h_t + D x_t
+with data-dependent Δ, B, C.  Causal depthwise conv front-end as in the
+original architecture.
+
+Decode API mirrors rwkv6: per-step states are returned for the BPD rollback.
+Training uses a chunked, remat'ed scan (same trick as rwkv6) to bound the
+backward-pass state storage.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init
+
+DT_RANK_DIV = 16  # dt_rank = ceil(d_model / 16), mamba default
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, (cfg.d_model + DT_RANK_DIV - 1) // DT_RANK_DIV)
+
+
+def mamba_init(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype=dtype),  # x and gate z
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv_width, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * n, dtype=dtype),  # Δ_low, B, C
+        "dt_proj": {
+            "w": jax.random.normal(ks[3], (dtr, di), dtype) * (dtr ** -0.5),
+            "b": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+                jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                           jnp.log(1e-3), jnp.log(1e-1))))).astype(dtype),
+        },
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[5], di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(p, x, conv_state):
+    """x: (B,S,di); conv_state: (B,W-1,di) trailing inputs of the prefix."""
+    w = p["conv_w"].astype(x.dtype)  # (W, di)
+    width = w.shape[0]
+    xx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B, W-1+S, di)
+    # depthwise causal conv via stacked shifts (W is tiny, typically 4)
+    s = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xx[:, i:i + s, :] * w[i]
+    out = out + p["conv_b"].astype(x.dtype)
+    new_state = xx[:, -(width - 1):, :] if width > 1 else xx[:, :0, :]
+    return jax.nn.silu(out), new_state
+
+
+def _ssm_scan(u, dt, B, C, A, D, h0, *, return_states: bool, chunk: int = 128):
+    """u: (B,S,di); dt: (B,S,di); B,C: (B,S,N); A: (di,N); h0: (B,di,N) f32."""
+    uf, dtf, Bf, Cf = (t.astype(jnp.float32) for t in (u, dt, B, C))
+    Af = A.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * Af)                    # (B,S,di,N)
+    dBu = dtf[..., None] * Bf[:, :, None, :] * uf[..., None]
+
+    def step(h, inp):
+        dA_t, dBu_t, C_t = inp                           # (B,di,N),(B,di,N),(B,N)
+        h_new = dA_t * h + dBu_t
+        y_t = jnp.einsum("bdn,bn->bd", h_new, C_t)
+        return h_new, (y_t, h_new) if return_states else y_t
+
+    xs = (dA.transpose(1, 0, 2, 3), dBu.transpose(1, 0, 2, 3),
+          Cf.transpose(1, 0, 2))
+
+    if return_states:
+        h_last, (ys, hs) = jax.lax.scan(step, h0, xs)
+        ys = ys.transpose(1, 0, 2)
+        states = hs.transpose(1, 0, 2, 3)                # (B,S,di,N)
+    else:
+        b, s, di = u.shape
+        n = A.shape[1]
+        c = min(chunk, s)
+        nchunks = (s + c - 1) // c
+        pad = nchunks * c - s
+        if pad:
+            xs = tuple(jnp.pad(t, ((0, pad),) + ((0, 0),) * (t.ndim - 1)) for t in xs)
+
+        def chunk_body(h, inp):
+            return jax.lax.scan(step, h, inp)
+
+        chunk_body = jax.checkpoint(chunk_body)
+        xs = tuple(t.reshape(nchunks, c, *t.shape[1:]) for t in xs)
+        h_last, ys = jax.lax.scan(chunk_body, h0, xs)
+        ys = ys.reshape(nchunks * c, b, di)[:s].transpose(1, 0, 2)
+        states = h_last[:, None]                         # (B,1,di,N)
+
+    y = ys + uf * D.astype(jnp.float32)
+    return y, states
+
+
+def mamba_apply(p, cfg: ModelConfig, x, *, conv_state=None, h0=None,
+                return_states: bool = False):
+    """x: (B,S,d) -> (y, aux) with aux = {conv_states, ssm_states}.
+
+    When return_states=True both conv and ssm states are per-step (S small on
+    the decode path); otherwise only the final states are returned.
+    """
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    width = cfg.ssm_conv_width
+    dtr = _dt_rank(cfg)
+    if conv_state is None:
+        conv_state = jnp.zeros((b, width - 1, di), x.dtype)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    xz = x @ p["in_proj"]["w"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, new_conv = _causal_conv(p, u, conv_state)
+
+    proj = u @ p["x_proj"]["w"].astype(x.dtype)          # (B,S,dtr+2N)
+    dt_low, Bm, Cm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_low @ p["dt_proj"]["w"].astype(x.dtype)
+        + p["dt_proj"]["b"].astype(x.dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, states = _ssm_scan(u, dt, Bm, Cm, A, p["D"], h0,
+                          return_states=return_states)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = y @ p["out_proj"]["w"].astype(x.dtype)
+
+    if return_states:
+        # per-step conv states: trailing (width-1) inputs before each step end
+        xx = jnp.concatenate([conv_state.astype(x.dtype),
+                              (x @ p["in_proj"]["w"].astype(x.dtype))[..., :di]],
+                             axis=1)
+        conv_states = jnp.stack(
+            [jax.lax.dynamic_slice_in_dim(xx, t + 1, width - 1, axis=1)
+             for t in range(s)], axis=1)                 # (B,S,W-1,di)
+        aux = {"conv": conv_states, "ssm": states}
+    else:
+        aux = {"conv": new_conv, "ssm": states[:, -1]}
+    return y, aux

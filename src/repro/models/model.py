@@ -1,0 +1,207 @@
+"""Model assembly: decoder-only ``CausalLM`` (all assigned text archs, the
+VLM backbone, and the RWKV/Hymba families) and the encoder-only stack
+(hubert).  The encoder-decoder MT model from the paper lives in seq2seq.py.
+
+All functions are pure; parameters/caches are dict pytrees.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.heads import heads_apply, heads_init
+from repro.models.blocks import (
+    block_cached,
+    block_cache_init,
+    block_full,
+    block_init,
+    commit_cache,
+)
+from repro.models.layers import (
+    dense_apply,
+    dense_init,
+    embed_apply,
+    embed_init,
+    norm_apply,
+    norm_init,
+    unembed_apply,
+)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig) -> Dict:
+    dtype = cfg.params_dtype
+    ks = jax.random.split(key, cfg.num_layers + 5)
+    p: Dict = {
+        "embed": embed_init(ks[0], cfg.padded_vocab_size, cfg.d_model,
+                            dtype=dtype),
+        "blocks": [block_init(ks[1 + i], cfg, i, dtype=dtype)
+                   for i in range(cfg.num_layers)],
+        "final_norm": norm_init(cfg.d_model, kind=cfg.norm_type, dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[cfg.num_layers + 1], cfg.d_model,
+                                  cfg.padded_vocab_size, dtype=dtype)
+    if cfg.bpd_enabled:
+        p["bpd_heads"] = heads_init(ks[cfg.num_layers + 2], cfg, dtype=dtype)
+    if cfg.num_meta_tokens:
+        p["meta_tokens"] = jax.random.normal(
+            ks[cfg.num_layers + 3], (cfg.num_meta_tokens, cfg.d_model),
+            dtype) * 0.02
+    if cfg.is_encoder_only:
+        p["pos_embed"] = jax.random.normal(
+            ks[cfg.num_layers + 4], (cfg.max_seq_len, cfg.d_model), dtype) * 0.02
+        p["mask_embed"] = jax.random.normal(
+            jax.random.fold_in(key, 99), (cfg.d_model,), dtype) * 0.02
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Input embedding (text / vision_text / audio)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: Dict) -> jnp.ndarray:
+    """batch keys by modality:
+       text        : tokens (B, S) int32
+       vision_text : patch_embeds (B, P, d) float + tokens (B, S-P-meta)
+       audio       : frame_embeds (B, S, d) float [+ mask (B, S) bool]
+    Meta tokens (hymba) are prepended here.
+    """
+    dtype = cfg.compute_dtype
+    if cfg.modality == "audio":
+        h = batch["frame_embeds"].astype(dtype)
+        if "mask" in batch:  # masked-prediction corruption (hubert training)
+            m = batch["mask"][..., None]
+            h = jnp.where(m, params["mask_embed"].astype(dtype), h)
+        s = h.shape[1]
+        h = h + params["pos_embed"][:s].astype(dtype)
+        return h
+    parts = []
+    if cfg.num_meta_tokens:
+        b = (batch["tokens"] if "tokens" in batch else batch["patch_embeds"]).shape[0]
+        meta = jnp.broadcast_to(params["meta_tokens"].astype(dtype),
+                                (b, cfg.num_meta_tokens, cfg.d_model))
+        parts.append(meta)
+    if cfg.modality == "vision_text" and "patch_embeds" in batch:
+        parts.append(batch["patch_embeds"].astype(dtype))
+    parts.append(embed_apply(params["embed"], batch["tokens"]).astype(dtype))
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+
+def prefix_len(cfg: ModelConfig, batch: Dict) -> int:
+    """Number of non-text positions preceding the text tokens."""
+    n = cfg.num_meta_tokens
+    if cfg.modality == "vision_text" and "patch_embeds" in batch:
+        n += batch["patch_embeds"].shape[1]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Backbone forwards
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(params, cfg: ModelConfig, h, *, positions=None,
+                   bidirectional: bool = False, caches=None, kv_chunk: int = 0,
+                   moe_full_capacity: bool = False):
+    """Whole-sequence forward. h: (B,S,d) embeddings.
+
+    Returns (hidden, metrics, caches) — caches populated if given (prefill).
+    """
+    metrics: Dict = {}
+    new_caches = list(caches) if caches is not None else None
+    use_remat = cfg.remat and caches is None   # training forward only
+
+    def run_block(i, bp, h, c):
+        return block_full(bp, cfg, i, h, positions=positions,
+                          bidirectional=bidirectional, cache=c,
+                          kv_chunk=kv_chunk,
+                          moe_full_capacity=moe_full_capacity)
+
+    for i, bp in enumerate(params["blocks"]):
+        c = caches[i] if caches is not None else None
+        if use_remat:
+            h, m, c_out = jax.checkpoint(
+                lambda bp_, h_, i_=i: run_block(i_, bp_, h_, None))(bp, h)
+        else:
+            h, m, c_out = run_block(i, bp, h, c)
+        for k, v in m.items():
+            metrics[k] = metrics.get(k, 0.0) + v / cfg.num_layers
+        if caches is not None:
+            new_caches[i] = c_out
+    h = norm_apply(params["final_norm"], h, kind=cfg.norm_type)
+    return h, metrics, (tuple(new_caches) if new_caches is not None else None)
+
+
+def decode_block_step(params, cfg: ModelConfig, h, caches, length, *,
+                      kv_chunk: int = 0):
+    """BPD verify-substep backbone: k fresh embeddings vs the caches.
+
+    Returns (hidden_block, staged_caches). staged caches carry stacked
+    per-step recurrent states; call ``commit_caches`` with k̂ to resolve.
+    """
+    new_caches = []
+    for i, bp in enumerate(params["blocks"]):
+        h, c_out = block_cached(bp, cfg, i, h, caches[i], length,
+                                kv_chunk=kv_chunk)
+        new_caches.append(c_out)
+    h = norm_apply(params["final_norm"], h, kind=cfg.norm_type)
+    return h, tuple(new_caches)
+
+
+def commit_caches(cfg: ModelConfig, caches, khat):
+    return tuple(commit_cache(cfg, c, khat) for c in caches)
+
+
+def init_caches(cfg: ModelConfig, batch: int, context_len: int, block_k: int,
+                dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    return tuple(block_cache_init(cfg, i, batch, context_len, block_k, dtype)
+                 for i in range(cfg.num_layers))
+
+
+# ---------------------------------------------------------------------------
+# Output projections
+# ---------------------------------------------------------------------------
+
+
+def project_vocab(params, cfg: ModelConfig, h) -> jnp.ndarray:
+    """(..., d) -> (..., padded_vocab) logits; pad lanes masked to -inf so
+    argmax / softmax never select them (see ModelConfig.padded_vocab_size)."""
+    if cfg.tie_embeddings:
+        logits = unembed_apply(params["embed"], h)
+    else:
+        logits = dense_apply(params["lm_head"], h)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(lane < cfg.vocab_size, logits,
+                           jnp.asarray(-1e9, logits.dtype))
+    return logits
+
+
+def all_head_logits(params, cfg: ModelConfig, hidden) -> jnp.ndarray:
+    """hidden: (..., d) -> (..., k, V) logits of p_1..p_k (paper Fig. 3)."""
+    if not cfg.bpd_enabled or "bpd_heads" not in params:
+        # headless model: p_1 only (greedy-decodable via block_k=1)
+        return project_vocab(params, cfg, hidden)[..., None, :]
+    outs = heads_apply(params["bpd_heads"], cfg, hidden,
+                       identity_p1=cfg.bpd_identity_p1)
+    return project_vocab(params, cfg, outs)
+
+
+def base_logits(params, cfg: ModelConfig, hidden) -> jnp.ndarray:
+    """p_1 logits only."""
+    if cfg.bpd_enabled and not cfg.bpd_identity_p1:
+        from repro.core.heads import head_apply_single
+        hidden = head_apply_single(params["bpd_heads"], cfg, hidden, 0,
+                                   identity_p1=False)
+    return project_vocab(params, cfg, hidden)

@@ -1,0 +1,211 @@
+"""RWKV-6 ("Finch", arXiv:2404.05892) — attention-free block with
+data-dependent per-channel decay.
+
+Structure per block (faithful to the reference implementation, with the
+low-rank data-dependent mixing of the five time-mix components):
+
+  time-mix:   token-shift ddlerp -> r,k,v,g projections, decay
+              w_t = exp(-exp(w0 + lora_w(x_w))); per-head state
+              S_t = diag(w_t) S_{t-1} + k_t^T v_t;
+              y_t = r_t · (S_{t-1} + diag(u) k_t^T v_t);  GroupNorm, gate g.
+  channel-mix: token-shift lerp; k = relu(x_k W_k)^2; y = sigmoid(x_r W_r) ⊙ (k W_v)
+
+The sequential ``wkv`` recurrence here is the pure-jnp oracle (lax.scan);
+``repro.kernels.rwkv6_scan`` provides the TPU Pallas version that keeps the
+(H, D, D) state resident in VMEM across the scan.
+
+Decode-time API returns *per-step* states so blockwise parallel decoding can
+roll the recurrent state back to the accepted prefix (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, group_norm_apply
+
+LORA_MIX_RANK = 32
+LORA_DECAY_RANK = 64
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv_tm_init(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift interpolation anchors
+        "mu_x": jnp.zeros((d,), dtype),
+        "mu": jnp.zeros((5, d), dtype),
+        # data-dependent mix lora: tanh(xxx @ A) (5 heads) @ B
+        "mix_A": jax.random.normal(ks[0], (d, 5 * LORA_MIX_RANK), dtype) * 1e-2,
+        "mix_B": jax.random.normal(ks[1], (5, LORA_MIX_RANK, d), dtype) * 1e-2,
+        # projections
+        "wr": dense_init(ks[2], d, d, dtype=dtype)["w"],
+        "wk": dense_init(ks[3], d, d, dtype=dtype)["w"],
+        "wv": dense_init(ks[4], d, d, dtype=dtype)["w"],
+        "wg": dense_init(ks[5], d, d, dtype=dtype)["w"],
+        "wo": dense_init(ks[6], d, d, dtype=dtype)["w"],
+        # decay: w0 + tanh(x_w @ dA) @ dB
+        "w0": jnp.full((d,), -4.0, dtype),  # exp(-exp(-4)) ~ slow decay init
+        "decay_A": jax.random.normal(ks[7], (d, LORA_DECAY_RANK), dtype) * 1e-2,
+        "decay_B": jax.random.normal(ks[8], (LORA_DECAY_RANK, d), dtype) * 1e-2,
+        # per-head bonus u ("time_faaaa")
+        "u": jax.random.normal(ks[9], (h, hd), dtype) * 0.1,
+        "ln_x": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+    }
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift mixing -> (xw, xk, xv, xr, xg)."""
+    sx = x_prev - x
+    xxx = x + sx * p["mu_x"].astype(x.dtype)
+    b, s, d = x.shape
+    low = jnp.tanh(xxx @ p["mix_A"].astype(x.dtype))          # (B,S,5r)
+    low = low.reshape(b, s, 5, LORA_MIX_RANK)
+    delta = jnp.einsum("bsnr,nrd->bsnd", low, p["mix_B"].astype(x.dtype))
+    mixed = []
+    for i in range(5):
+        mu_i = p["mu"][i].astype(x.dtype) + delta[:, :, i]
+        mixed.append(x + sx * mu_i)
+    return tuple(mixed)
+
+
+def _wkv_step(uf):
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,D) each
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        yt = jnp.einsum("bhi,bhij->bhj", rt, S + uf[None, :, :, None] * kv)
+        S_new = wt[..., None] * S + kv
+        return S_new, yt
+
+    return step
+
+
+def _wkv_scan(r, k, v, w, u, state0, *, return_states: bool = False,
+              chunk: int = 128):
+    """Sequential wkv recurrence (pure-jnp oracle).
+
+    r,k,v,w: (B,S,H,D); u: (H,D); state0: (B,H,D,D) f32.
+
+    return_states=True (decode path, S == block_k, small): additionally
+    returns the per-step states (B,S,H,D,D) so BPD can roll back to the
+    accepted prefix.
+
+    return_states=False (training): scan-of-chunks with jax.checkpoint so the
+    backward pass stores only one (B,H,D,D) state per chunk boundary instead
+    of one per timestep.
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    step = _wkv_step(uf)
+
+    if return_states:
+        def step_with_state(S, inp):
+            S_new, yt = step(S, inp)
+            return S_new, (yt, S_new)
+
+        xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+        _, (ys, states) = jax.lax.scan(step_with_state, state0, xs)
+        return ys.transpose(1, 0, 2, 3), states.transpose(1, 0, 2, 3, 4)
+
+    b, s, h, d = rf.shape
+    c = min(chunk, s)
+    nchunks = (s + c - 1) // c
+    pad = nchunks * c - s
+    if pad:
+        zeros = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rf, kf, vf = zeros(rf), zeros(kf), zeros(vf)
+        wf = jnp.pad(wf, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+
+    def chunk_body(S, inp):
+        # inp: (C, B, H, D) x4
+        S_new, ys = jax.lax.scan(step, S, inp)
+        return S_new, ys
+
+    chunk_body = jax.checkpoint(chunk_body)
+    xs = tuple(
+        t.transpose(1, 0, 2, 3).reshape(nchunks, c, b, h, d)
+        for t in (rf, kf, vf, wf))
+    final, ys = jax.lax.scan(chunk_body, state0, xs)
+    ys = ys.reshape(nchunks * c, b, h, d)[:s]
+    return ys.transpose(1, 0, 2, 3), final[None].transpose(1, 0, 2, 3, 4)
+
+
+def rwkv_tm_apply(p, cfg: ModelConfig, x, *, x_prev=None, state0=None,
+                  return_states: bool = False):
+    """Time-mix forward.
+
+    x       : (B, S, d)
+    x_prev  : (B, d) last token of the preceding context (token shift), zeros
+              at sequence start.
+    state0  : (B, H, D, D) initial wkv state (zeros at sequence start).
+    Returns (y, aux) where aux = {"x_last": (B,d), "state": final or
+    per-step states if return_states}.
+    """
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, shifted)
+
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(b, s, h, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+
+    ww = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ p["decay_A"].astype(jnp.float32))
+        @ p["decay_B"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, s, h, hd)
+
+    y, states = _wkv_scan(r, k, v, w, p["u"], state0,
+                          return_states=return_states)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = group_norm_apply(p["ln_x"], y, h)
+    y = (y * g) @ p["wo"].astype(x.dtype)
+
+    aux = {"x_last": x[:, -1, :],
+           "state": states if return_states else states[:, -1]}
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Channel mix
+# ---------------------------------------------------------------------------
+
+
+def rwkv_cm_init(key, cfg: ModelConfig, *, dtype=jnp.float32) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dtype),
+        "mu_r": jnp.zeros((d,), dtype),
+        "wk": dense_init(ks[0], d, ff, dtype=dtype)["w"],
+        "wv": dense_init(ks[1], ff, d, dtype=dtype)["w"],
+        "wr": dense_init(ks[2], d, d, dtype=dtype)["w"],
+    }
+
+
+def rwkv_cm_apply(p, cfg: ModelConfig, x, *, x_prev=None):
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    sx = shifted - x
+    xk = x + sx * p["mu_k"].astype(x.dtype)
+    xr = x + sx * p["mu_r"].astype(x.dtype)
+    kk = jax.nn.relu(xk @ p["wk"].astype(x.dtype))
+    kk = kk * kk
+    vv = kk @ p["wv"].astype(x.dtype)
+    rr = jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype))
+    return rr * vv, {"x_last": x[:, -1, :]}

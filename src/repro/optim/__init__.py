@@ -1,0 +1,23 @@
+from repro.optim.adamw import (
+    lr_scale_mask,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    freeze_mask,
+    make_schedule,
+    optimizer_init,
+    optimizer_update,
+)
+
+__all__ = [
+    "adafactor_init",
+    "adafactor_update",
+    "adamw_init",
+    "adamw_update",
+    "freeze_mask",
+    "lr_scale_mask",
+    "make_schedule",
+    "optimizer_init",
+    "optimizer_update",
+]

@@ -1,0 +1,206 @@
+"""AdamW and Adafactor, pure-JAX pytree implementations, with global-norm
+clipping, parameter masking (paper §6.1 frozen-base training), and the
+schedules used by the paper's Transformer recipe (inverse-sqrt warmup) plus
+cosine decay."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.utils.tree import global_norm, tree_map_with_name
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def make_schedule(tc: TrainConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    warm = max(tc.warmup_steps, 1)
+
+    def inv_sqrt(step):
+        s = jnp.maximum(step, 1).astype(jnp.float32)
+        return tc.lr * jnp.minimum(s / warm, jnp.sqrt(warm / s))
+
+    def cosine(step):
+        s = step.astype(jnp.float32)
+        warm_frac = jnp.minimum(s / warm, 1.0)
+        prog = jnp.clip((s - warm) / jnp.maximum(tc.steps - warm, 1), 0.0, 1.0)
+        return tc.lr * warm_frac * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+    def constant(step):
+        s = step.astype(jnp.float32)
+        return tc.lr * jnp.minimum(s / warm, 1.0)
+
+    return {"inv_sqrt": inv_sqrt, "cosine": cosine, "constant": constant}[tc.schedule]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Pytree) -> Dict:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads: Pytree, state: Dict, params: Pytree, tc: TrainConfig,
+                 *, schedule: Callable, mask: Optional[Pytree] = None):
+    """Returns (new_params, new_state, metrics).  mask: 1.0=train, 0.0=frozen."""
+    step = state["step"] + 1
+    lr = schedule(step)
+
+    gnorm = global_norm(grads)
+    if tc.grad_clip > 0:
+        scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    b1, b2, eps, wd = tc.b1, tc.b2, tc.eps, tc.weight_decay
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p, m):
+        g = g.astype(jnp.float32)
+        mu_n = b1 * mu + (1 - b1) * g
+        nu_n = b2 * nu + (1 - b2) * jnp.square(g)
+        upd = (mu_n / bc1) / (jnp.sqrt(nu_n / bc2) + eps)
+        upd = upd + wd * p.astype(jnp.float32)
+        if m is not None:
+            # mask is a per-leaf learning-rate multiplier: 0.0 = frozen,
+            # 1.0 = full lr, fractional = discriminative fine-tuning.
+            p_n = p.astype(jnp.float32) - lr * m * upd
+            mu_n = jnp.where(m > 0, mu_n, mu)
+            nu_n = jnp.where(m > 0, nu_n, nu)
+        else:
+            p_n = p.astype(jnp.float32) - lr * upd
+        return p_n.astype(p.dtype), mu_n, nu_n
+
+    if mask is None:
+        out = jax.tree_util.tree_map(
+            lambda g, mu, nu, p: upd(g, mu, nu, p, None),
+            grads, state["mu"], state["nu"], params)
+    else:
+        out = jax.tree_util.tree_map(
+            upd, grads, state["mu"], state["nu"], params, mask)
+
+    new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory-lean option for big runs)
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params: Pytree) -> Dict:
+    def factored(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(p, jnp.float32)}
+
+    return {"v": jax.tree_util.tree_map(factored, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads: Pytree, state: Dict, params: Pytree,
+                     tc: TrainConfig, *, schedule: Callable,
+                     mask: Optional[Pytree] = None):
+    step = state["step"] + 1
+    lr = schedule(step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    eps = 1e-30
+
+    gnorm = global_norm(grads)
+    if tc.grad_clip > 0:
+        scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    def upd(g, v, p, m):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if "vr" in v:
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = (vr[..., None] / jnp.maximum(
+                jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps)) * vc[..., None, :]
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            v_n = {"vr": vr, "vc": vc}
+        else:
+            v_ = decay * v["v"] + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v_, eps))
+            v_n = {"v": v_}
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+        u = u / jnp.maximum(1.0, rms)
+        p_n = p.astype(jnp.float32) - lr * (u + tc.weight_decay * p.astype(jnp.float32))
+        if m is not None:
+            p_n = jnp.where(m > 0, p_n, p.astype(jnp.float32))
+        return p_n.astype(p.dtype), v_n
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_m = ([None] * len(flat_p) if mask is None
+              else treedef.flatten_up_to(mask))
+    out = [upd(g, v, p, m) for g, v, p, m in zip(flat_g, flat_v, flat_p, flat_m)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_params, {"v": new_v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+
+def optimizer_init(params: Pytree, tc: TrainConfig) -> Dict:
+    return adamw_init(params) if tc.optimizer == "adamw" else adafactor_init(params)
+
+
+def optimizer_update(grads, state, params, tc: TrainConfig,
+                     mask: Optional[Pytree] = None):
+    schedule = make_schedule(tc)
+    if tc.optimizer == "adamw":
+        return adamw_update(grads, state, params, tc, schedule=schedule, mask=mask)
+    return adafactor_update(grads, state, params, tc, schedule=schedule, mask=mask)
+
+
+def freeze_mask(params: Pytree, *, train_only_heads: bool) -> Optional[Pytree]:
+    """§6.1: mask that trains only the BPD heads (1.0 = trainable)."""
+    if not train_only_heads:
+        return None
+    return tree_map_with_name(
+        lambda name, p: jnp.ones((), jnp.float32)
+        if name.startswith("bpd_heads") else jnp.zeros((), jnp.float32),
+        params)
+
+
+def lr_scale_mask(params: Pytree, *, trunk_scale: float) -> Pytree:
+    """Discriminative fine-tuning (§6.1 at small scale): heads at full lr,
+    everything else at ``trunk_scale`` × lr.  At the paper's model scale the
+    trunk absorbs the multi-head objective; at CPU-repro scale an unscaled
+    joint update lets the future heads' gradients overwrite p_1's behaviour
+    through the shared vocab projection (measured: teacher-forced p_1
+    accuracy 0.99 -> 0.58 in 500 steps).  Scaling the trunk lr interpolates
+    between the paper's frozen and fine-tuned settings."""
+    return tree_map_with_name(
+        lambda name, p: jnp.ones((), jnp.float32)
+        if name.startswith("bpd_heads")
+        else jnp.full((), trunk_scale, jnp.float32),
+        params)

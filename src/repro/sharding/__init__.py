@@ -1,0 +1,19 @@
+from repro.sharding.policy import (
+    batch_axes,
+    batch_specs,
+    cache_specs,
+    data_spec,
+    named,
+    param_shardings,
+    param_specs,
+)
+
+__all__ = [
+    "batch_axes",
+    "batch_specs",
+    "cache_specs",
+    "data_spec",
+    "named",
+    "param_shardings",
+    "param_specs",
+]

@@ -1,0 +1,21 @@
+from repro.utils.tree import (
+    flatten_with_names,
+    global_norm,
+    match_rules,
+    path_str,
+    tree_bytes,
+    tree_cast,
+    tree_map_with_name,
+    tree_size,
+)
+
+__all__ = [
+    "flatten_with_names",
+    "global_norm",
+    "match_rules",
+    "path_str",
+    "tree_bytes",
+    "tree_cast",
+    "tree_map_with_name",
+    "tree_size",
+]

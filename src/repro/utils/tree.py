@@ -1,0 +1,78 @@
+"""Pytree utilities used across the framework.
+
+Pure-JAX (no flax/optax in this environment): parameters, optimizer states
+and caches are plain nested dicts of jnp arrays.  These helpers keep that
+manageable.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_size(tree: Pytree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def path_str(path) -> str:
+    """Render a jax KeyPath as a '/'-joined string, e.g. 'blocks/3/attn/wq'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - future key types
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_name(fn: Callable[[str, Any], Any], tree: Pytree) -> Pytree:
+    """tree_map where fn receives ('a/b/c', leaf)."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(path_str(p), x), tree)
+
+
+def tree_select(pred: Callable[[str], bool], tree: Pytree) -> Pytree:
+    """Zero-out (stop-gradient style masks) helper: returns a {0,1} mask tree."""
+    return tree_map_with_name(
+        lambda name, x: jnp.ones((), x.dtype) if pred(name) else jnp.zeros((), x.dtype),
+        tree,
+    )
+
+
+def match_rules(name: str, rules: list[tuple[str, Any]], default: Any) -> Any:
+    """First regex rule (searched, not fullmatch) that hits wins."""
+    for pattern, value in rules:
+        if re.search(pattern, name):
+            return value
+    return default
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def flatten_with_names(tree: Pytree) -> list[tuple[str, Any]]:
+    out: list[tuple[str, Any]] = []
+    jax.tree_util.tree_map_with_path(lambda p, x: out.append((path_str(p), x)), tree)
+    return out

@@ -1,0 +1,72 @@
+"""Shared tiny-model fixtures.  Tests run on 1 CPU device (the 512-device
+XLA_FLAGS override is set only inside repro.launch.dryrun)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import DecodeConfig, ModelConfig
+
+
+def tiny_dense(**kw) -> ModelConfig:
+    base = dict(name="tiny-dense", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=97, bpd_k=4,
+                max_seq_len=512, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_moe(**kw) -> ModelConfig:
+    base = dict(name="tiny-moe", family="moe", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=97,
+                mlp_type="moe", num_experts=4, num_experts_per_tok=2,
+                num_shared_experts=1, shared_expert_d_ff=64, bpd_k=4,
+                max_seq_len=512, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_rwkv(**kw) -> ModelConfig:
+    base = dict(name="tiny-rwkv", family="ssm", num_layers=2, d_model=64,
+                block_type="rwkv6", mlp_type="rwkv_channel_mix",
+                rwkv_head_dim=32, d_ff=128, vocab_size=97, bpd_k=4,
+                max_seq_len=512, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_hymba(**kw) -> ModelConfig:
+    base = dict(name="tiny-hymba", family="hybrid", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, block_type="hymba", d_ff=128,
+                vocab_size=97, bpd_k=4, ssm_state_dim=8, num_meta_tokens=4,
+                sliding_window=32, global_attn_layers=(0,),
+                max_seq_len=512, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_seq2seq(**kw) -> ModelConfig:
+    base = dict(name="tiny-s2s", family="seq2seq", is_encoder_decoder=True,
+                num_encoder_layers=2, num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=4, d_ff=128, vocab_size=97, bpd_k=4,
+                max_seq_len=512, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+FAMILY_CONFIGS = {
+    "dense": tiny_dense,
+    "moe": tiny_moe,
+    "rwkv6": tiny_rwkv,
+    "hymba": tiny_hymba,
+}
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_tokens(key, cfg: ModelConfig, b: int, s: int):
+    return jax.random.randint(key, (b, s), 0, cfg.vocab_size)

@@ -1,0 +1,124 @@
+"""Tests for machinery added during the perf/experiment iterations:
+phrase-expansion task, fractional lr masks, detached head residual,
+expert padding, mesh-conditional sharding hints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import tiny_dense, tiny_moe
+from repro.config import TrainConfig
+from repro.core.heads import head_apply_dynamic, heads_init
+from repro.data.synthetic import PhraseMT
+from repro.models import model as M
+from repro.optim import lr_scale_mask, optimizer_init, optimizer_update
+from repro.sharding.policy import maybe_shard
+
+
+def test_phrase_mt_structure():
+    task = PhraseMT(vocab=32, expand=3, seed=0)
+    src, tgt = task.make_pair(np.random.default_rng(0), 4, 5)
+    assert tgt.shape == (4, 15)
+    np.testing.assert_array_equal(tgt, task.gold(src))
+    # every source token always expands to the same phrase
+    src2 = np.tile(src[:1], (2, 1))
+    t2 = task.gold(src2)
+    np.testing.assert_array_equal(t2[0], t2[1])
+    assert (tgt > 0).all() and (tgt < 32).all()
+
+
+def test_lr_scale_mask_scales_updates():
+    params = {"bpd_heads": {"w": jnp.zeros(3)}, "trunk": {"w": jnp.zeros(3)}}
+    tc = TrainConfig(lr=1.0, warmup_steps=1, schedule="constant",
+                     weight_decay=0.0, grad_clip=0.0)
+    mask = lr_scale_mask(params, trunk_scale=0.25)
+    opt = optimizer_init(params, tc)
+    g = jax.tree_util.tree_map(lambda x: jnp.ones_like(x), params)
+    p2, _, _ = optimizer_update(g, opt, params, tc, mask=mask)
+    head_step = float(jnp.abs(p2["bpd_heads"]["w"][0]))
+    trunk_step = float(jnp.abs(p2["trunk"]["w"][0]))
+    np.testing.assert_allclose(trunk_step, 0.25 * head_step, rtol=1e-5)
+
+
+def test_detach_residual_preserves_values():
+    cfg = tiny_dense(bpd_k=3)
+    p = heads_init(jax.random.PRNGKey(0), cfg)
+    hidden = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model))
+    for idx in (0, 1, 2):
+        a = head_apply_dynamic(p, cfg, hidden, jnp.asarray(idx),
+                               detach_residual=False)
+        b = head_apply_dynamic(p, cfg, hidden, jnp.asarray(idx),
+                               detach_residual=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_detach_residual_blocks_gradient_path():
+    cfg = tiny_dense(bpd_k=2)
+    p = heads_init(jax.random.PRNGKey(0), cfg)
+    # zero the head FFN so the ONLY gradient path to hidden is the residual
+    p = dict(p, w1=jnp.zeros_like(p["w1"]), w2=jnp.zeros_like(p["w2"]))
+    hidden = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model))
+
+    def loss(h, detach):
+        out = head_apply_dynamic(p, cfg, h, jnp.asarray(1),
+                                 detach_residual=detach)
+        return jnp.sum(out ** 2)
+
+    g_res = jax.grad(lambda h: loss(h, False))(hidden)
+    g_det = jax.grad(lambda h: loss(h, True))(hidden)
+    assert float(jnp.sum(jnp.abs(g_res))) > 0
+    assert float(jnp.sum(jnp.abs(g_det))) == 0.0
+
+
+def test_expert_padding_never_selected():
+    cfg = tiny_moe(num_experts=3, num_experts_per_tok=2,
+                   expert_pad_multiple=4)
+    assert cfg.padded_num_experts == 4
+    from repro.models.moe import moe_apply, moe_init
+
+    p = moe_init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    assert p["w1"].shape[0] == 4
+    assert p["router"]["w"].shape[1] == 3     # router sees logical experts
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, metrics = moe_apply(p, cfg, x, full_capacity=True)
+    assert bool(jnp.isfinite(y).all())
+    assert float(metrics["moe_dropped_frac"]) == 0.0
+
+
+def test_maybe_shard_noop_without_mesh():
+    from jax.sharding import PartitionSpec as P
+
+    x = jnp.ones((4, 4))
+    y = jax.jit(lambda a: maybe_shard(a, P(None, None)) * 2)(x)
+    np.testing.assert_array_equal(np.asarray(y), 2 * np.asarray(x))
+
+
+def test_remat_forward_unchanged():
+    cfg = tiny_dense()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    h = M.embed_inputs(params, cfg, {"tokens": tokens})
+    pos = jnp.arange(12, dtype=jnp.int32)
+    a, _, _ = M.forward_hidden(params, cfg, h, positions=pos)
+    b, _, _ = M.forward_hidden(params, cfg.replace(remat=True), h,
+                               positions=pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_remat_gradients_match():
+    cfg = tiny_dense(num_layers=1)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+
+    def loss(p, c):
+        from repro.core.train import lm_loss
+        tc = TrainConfig(head_loss="mean")
+        return lm_loss(p, c, tc, {"tokens": tokens}, jax.random.PRNGKey(2))[0]
+
+    g1 = jax.grad(lambda p: loss(p, cfg))(params)
+    g2 = jax.grad(lambda p: loss(p, cfg.replace(remat=True)))(params)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                                rtol=1e-4, atol=1e-5), g1, g2)

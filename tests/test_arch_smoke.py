@@ -1,0 +1,133 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each test instantiates the REDUCED variant of the same family (<=2 layers,
+d_model<=512, <=4 experts), runs one forward/train step on CPU, and asserts
+output shapes + finite values.  Decoder archs additionally run one BPD
+serve iteration.  The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import DecodeConfig, TrainConfig, get_config
+from repro.configs import ASSIGNED
+from repro.core import decode as D
+from repro.launch import steps as steps_lib
+from repro.models import model as M
+from repro.models import seq2seq as S
+from repro.optim import optimizer_init
+
+ALL_ARCHS = ASSIGNED + ["paper-mt-base"]
+
+
+def _smoke_batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.is_encoder_decoder:
+        return {"src": jnp.asarray(rng.integers(1, cfg.vocab_size, (b, s)),
+                                   jnp.int32),
+                "tgt": jnp.asarray(rng.integers(1, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    if cfg.modality == "audio":
+        mask = np.zeros((b, s), bool)
+        mask[:, 3:7] = True
+        return {"frame_embeds": jnp.asarray(
+                    rng.standard_normal((b, s, cfg.d_model)), jnp.float32),
+                "mask": jnp.asarray(mask),
+                "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                       jnp.int32)}
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    if cfg.modality == "vision_text":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((b, 4, cfg.d_model)), jnp.float32)
+    return batch
+
+
+def _init(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return S.init(key, cfg) if cfg.is_encoder_decoder else M.init(key, cfg)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_config_is_reduced(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    assert cfg.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    cfg.validate()
+    assert cfg.source, f"{arch} must cite its source"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, smoke=True).replace(dtype="float32")
+    tc = TrainConfig(global_batch=2, seq_len=16, head_loss="random")
+    params = _init(cfg)
+    opt = optimizer_init(params, tc)
+    step = jax.jit(steps_lib.make_train_step(cfg, tc))
+    batch = _smoke_batch(cfg)
+    params2, opt2, metrics = step(params, opt, batch, jax.random.PRNGKey(1))
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # parameters actually moved
+    moved = jax.tree_util.tree_reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x))),
+        jax.tree_util.tree_map(lambda a, b: a - b, params, params2), 0.0)
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS
+                                  if not get_config(a).is_encoder_only])
+def test_bpd_decode_smoke(arch):
+    cfg = get_config(arch, smoke=True).replace(dtype="float32")
+    params = _init(cfg)
+    dec = DecodeConfig(max_new_tokens=8, criterion="exact")
+    batch = _smoke_batch(cfg, s=8)
+    if cfg.is_encoder_decoder:
+        toks, stats = D.bpd_decode_seq2seq(params, cfg, dec,
+                                           {"src": batch["src"]})
+    else:
+        toks, stats = D.bpd_decode(params, cfg, dec, batch)
+    toks = np.asarray(toks)
+    assert np.isfinite(toks).all()
+    assert toks.max() < cfg.vocab_size          # vocab padding never leaks
+    assert float(stats["mean_accepted"]) >= 1.0
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS
+                                  if get_config(a).is_encoder_only])
+def test_encoder_only_forward_smoke(arch):
+    cfg = get_config(arch, smoke=True).replace(dtype="float32")
+    params = _init(cfg)
+    batch = _smoke_batch(cfg)
+    enc = jax.jit(steps_lib.make_prefill_step(cfg, DecodeConfig()))
+    logits = enc(params, {"frame_embeds": batch["frame_embeds"]})
+    assert logits.shape[:2] == batch["frame_embeds"].shape[:2]
+    assert logits.shape[-1] == cfg.padded_vocab_size
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS
+                                  if not get_config(a).is_encoder_only
+                                  and not get_config(a).is_encoder_decoder])
+def test_serve_step_one_iteration(arch):
+    """One BPD serve iteration against a materialized cache (what decode_32k
+    lowers), at smoke scale."""
+    cfg = get_config(arch, smoke=True).replace(dtype="float32")
+    params = _init(cfg)
+    dec = DecodeConfig(max_new_tokens=16, block_k=cfg.bpd_k)
+    seq_len = 32
+    step = steps_lib.make_serve_step(cfg, dec, seq_len=seq_len, max_new=16)
+    state = steps_lib.materialize_serve_state(cfg, dec, batch=2,
+                                              seq_len=seq_len, max_new=16)
+    out = jax.jit(step)(params, state)
+    assert int(out.iters) == 1
+    assert np.all(np.asarray(out.text_len) >= np.asarray(state.text_len) + 1)
+    assert np.isfinite(np.asarray(out.proposals)).all()

@@ -1,0 +1,122 @@
+"""The paper's central guarantee (§3): blockwise parallel decoding with
+exact-match verification produces the SAME output as greedy decoding, for
+any block size k, any architecture family, any prompt.
+
+Property-tested with hypothesis over random model seeds / prompts / k, plus
+deterministic cases for EOS handling and per-row divergence.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import FAMILY_CONFIGS, tiny_seq2seq
+from repro.config import DecodeConfig
+from repro.core import decode as D
+from repro.models import model as M
+from repro.models import seq2seq as S
+
+
+def _decode_pair(cfg, seed, b, prompt_len, max_new, k, eos=-1):
+    params = M.init(jax.random.PRNGKey(seed), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                          (b, prompt_len), 0, cfg.vocab_size)}
+    dec = DecodeConfig(max_new_tokens=max_new, block_k=k, criterion="exact",
+                       eos_id=eos)
+    bt, bs = D.bpd_decode(params, cfg, dec, batch)
+    gt, gs = D.greedy_decode(params, cfg, dec, batch)
+    n = prompt_len + max_new
+    return (np.asarray(bt[:, :n]), np.asarray(gt[:, :n]),
+            np.asarray(bs["text_len"]), np.asarray(gs["text_len"]), bs)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 6),
+       family=st.sampled_from(sorted(FAMILY_CONFIGS)))
+def test_bpd_equals_greedy_property(seed, k, family):
+    cfg = FAMILY_CONFIGS[family](bpd_k=k)
+    bt, gt, bl, gl, _ = _decode_pair(cfg, seed, b=2, prompt_len=6, max_new=12, k=k)
+    np.testing.assert_array_equal(bl, gl)
+    np.testing.assert_array_equal(bt, gt)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+def test_bpd_equals_greedy_with_eos(family):
+    cfg = FAMILY_CONFIGS[family]()
+    # eos inside the vocab: both decoders must stop at the same position
+    bt, gt, bl, gl, _ = _decode_pair(cfg, seed=7, b=4, prompt_len=5,
+                                     max_new=16, k=4, eos=3)
+    np.testing.assert_array_equal(bl, gl)
+    for row in range(4):
+        n = bl[row]
+        np.testing.assert_array_equal(bt[row, :n], gt[row, :n])
+
+
+def test_bpd_uses_fewer_iterations_than_greedy_on_repetitive_input():
+    """A prompt of one repeated token makes the (untrained but deterministic)
+    model highly predictable for its own heads is NOT guaranteed; instead we
+    check the invocation count never exceeds greedy's."""
+    cfg = FAMILY_CONFIGS["dense"]()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.zeros((2, 6), jnp.int32)}
+    dec = DecodeConfig(max_new_tokens=20, block_k=4)
+    _, bs = D.bpd_decode(params, cfg, dec, batch)
+    assert int(bs["iterations"]) <= 20
+    assert float(bs["mean_accepted"]) >= 1.0
+
+
+def test_seq2seq_bpd_equals_greedy():
+    cfg = tiny_seq2seq()
+    params = S.init(jax.random.PRNGKey(3), cfg)
+    batch = {"src": jax.random.randint(jax.random.PRNGKey(4), (3, 9), 1,
+                                       cfg.vocab_size)}
+    dec = DecodeConfig(max_new_tokens=14, criterion="exact", eos_id=1)
+    bt, bs = D.bpd_decode_seq2seq(params, cfg, dec, batch)
+    gt, gs = D.greedy_decode_seq2seq(params, cfg, dec, batch)
+    bl, gl = np.asarray(bs["text_len"]), np.asarray(gs["text_len"])
+    np.testing.assert_array_equal(bl, gl)
+    for row in range(3):
+        n = bl[row] - 1  # text_len includes BOS; outputs are BOS-stripped
+        np.testing.assert_array_equal(np.asarray(bt)[row, :n],
+                                      np.asarray(gt)[row, :n])
+
+
+def test_vlm_prefix_bpd_equals_greedy():
+    cfg = FAMILY_CONFIGS["dense"](modality="vision_text")
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    patches = jax.random.normal(jax.random.PRNGKey(1), (2, 6, cfg.d_model))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 5), 0,
+                                          cfg.vocab_size),
+             "patch_embeds": patches}
+    dec = DecodeConfig(max_new_tokens=10, block_k=4)
+    bt, _ = D.bpd_decode(params, cfg, dec, batch)
+    gt, _ = D.greedy_decode(params, cfg, dec, batch)
+    np.testing.assert_array_equal(np.asarray(bt[:, :15]), np.asarray(gt[:, :15]))
+
+
+def test_rows_advance_independently():
+    """Different rows accept different k̂ per iteration; all still match
+    their own greedy decode (checked above) and generated counts hit max."""
+    cfg = FAMILY_CONFIGS["dense"]()
+    params = M.init(jax.random.PRNGKey(11), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(12), (6, 4), 0,
+                                          cfg.vocab_size)}
+    dec = DecodeConfig(max_new_tokens=12, block_k=4)
+    _, stats = D.bpd_decode(params, cfg, dec, batch)
+    assert np.all(np.asarray(stats["generated"]) == 12)
+
+
+def test_approximate_criteria_accept_at_least_exact():
+    cfg = FAMILY_CONFIGS["dense"]()
+    params = M.init(jax.random.PRNGKey(5), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(6), (4, 6), 0,
+                                          cfg.vocab_size)}
+    means = {}
+    for crit, kw in [("exact", {}), ("topk", dict(top_k=3)),
+                     ("distance", dict(epsilon=5.0))]:
+        dec = DecodeConfig(max_new_tokens=24, block_k=4, criterion=crit, **kw)
+        _, stats = D.bpd_decode(params, cfg, dec, batch)
+        means[crit] = float(stats["mean_accepted"])
+    assert means["topk"] >= means["exact"] - 1e-6
+    assert means["distance"] >= 1.0

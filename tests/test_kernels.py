@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------------------------
+# block_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,kq,h,kv,hd,l,window,meta,block_kv",
+    [
+        (1, 2, 4, 4, 16, 64, 0, 0, 32),     # MHA
+        (2, 4, 8, 2, 32, 100, 0, 0, 32),    # GQA, ragged L
+        (1, 8, 6, 2, 64, 256, 64, 0, 128),  # sliding window
+        (2, 4, 4, 1, 32, 96, 32, 4, 32),    # MQA + meta tokens
+        (1, 1, 2, 2, 128, 33, 0, 0, 512),   # single query, one short block
+    ])
+def test_verify_attention_sweep(b, kq, h, kv, hd, l, window, meta, block_kv,
+                                dtype):
+    q = _rand((b, kq, h, hd), dtype)
+    k = _rand((b, l, kv, hd), dtype)
+    v = _rand((b, l, kv, hd), dtype)
+    base = RNG.integers(max(meta, 1), l - kq, b)
+    qpos = jnp.asarray(base[:, None] + np.arange(kq)[None, :], jnp.int32)
+    kvpos = np.tile(np.arange(l)[None], (b, 1))
+    kvpos[:, RNG.integers(0, l, 5)] = -1          # stale speculative slots
+    kvpos = jnp.asarray(kvpos, jnp.int32)
+    got = ops.verify_attention(q, k, v, qpos, kvpos, window=window,
+                               num_meta=meta, block_kv=block_kv)
+    want = ref.verify_attention(q, k, v, qpos, kvpos, window=window,
+                                num_meta=meta)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_verify_attention_masks_all_stale_rows():
+    """A row whose only visible entry is its own block must not NaN."""
+    b, kq, h, kv, hd, l = 1, 2, 2, 2, 16, 16
+    q = _rand((b, kq, h, hd), jnp.float32)
+    k = _rand((b, l, kv, hd), jnp.float32)
+    v = _rand((b, l, kv, hd), jnp.float32)
+    qpos = jnp.asarray([[0, 1]], jnp.int32)
+    kvpos = jnp.asarray(np.r_[0:2, [-1] * (l - 2)][None], jnp.int32)
+    got = ops.verify_attention(q, k, v, qpos, kvpos)
+    assert not bool(jnp.any(jnp.isnan(got)))
+
+
+# ---------------------------------------------------------------------------
+# rwkv6_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,d,chunk", [
+    (1, 16, 1, 16, 16),
+    (2, 37, 3, 16, 16),      # ragged: S % chunk != 0
+    (1, 128, 2, 64, 16),     # production head_dim
+    (2, 64, 2, 32, 32),      # larger chunk
+])
+def test_rwkv6_scan_sweep(b, s, h, d, chunk, dtype):
+    r, k, v = (_rand((b, s, h, d), dtype) for _ in range(3))
+    logw = -jnp.exp(_rand((b, s, h, d), jnp.float32) * 0.5 - 1.0)
+    u = _rand((h, d), jnp.float32) * 0.1
+    y1, s1 = ops.rwkv6_scan(r, k, v, logw, u, chunk=chunk)
+    y2, s2 = ref.rwkv6_scan(r, k, v, logw, u)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), **tol)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), **tol)
+
+
+def test_rwkv6_scan_strong_decay_stable():
+    """Strong decays underflow 1/a; the clamp must keep outputs finite and
+    correct (annihilated contributions are ~0 in the oracle too)."""
+    b, s, h, d = 1, 48, 1, 16
+    r, k, v = (_rand((b, s, h, d), jnp.float32) for _ in range(3))
+    logw = jnp.full((b, s, h, d), -8.0)           # w = e^-8: near-total decay
+    u = _rand((h, d), jnp.float32) * 0.1
+    y1, _ = ops.rwkv6_scan(r, k, v, logw, u, chunk=16)
+    y2, _ = ref.rwkv6_scan(r, k, v, logw, u)
+    assert np.isfinite(np.asarray(y1)).all()
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused_heads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,vocab,vp,top_t,block_v", [
+    (8, 32, 256, 256, 1, 128),
+    (17, 32, 1000, 1024, 4, 256),     # ragged rows + vocab pad
+    (64, 64, 504, 512, 2, 512),       # hubert-style tiny vocab, 1 tile
+    (5, 128, 2000, 2048, 4, 1024),
+])
+def test_fused_heads_sweep(n, d, vocab, vp, top_t, block_v, dtype):
+    o = _rand((n, d), dtype)
+    w = _rand((d, vp), dtype)
+    v1, i1 = ops.fused_heads_topk(o, w, vocab=vocab, top_t=top_t,
+                                  block_v=block_v, block_rows=8)
+    v2, i2 = ref.heads_topk(o, w, vocab=vocab, top_t=top_t)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), **tol)
+    # ids may differ only where values tie (random floats: no ties expected)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_fused_heads_never_selects_vocab_pad():
+    o = jnp.ones((4, 16), jnp.float32)
+    w = jnp.ones((16, 512), jnp.float32) * 10.0   # pad lanes equally huge
+    _, ids = ops.fused_heads_topk(o, w, vocab=300, top_t=4, block_v=128,
+                                  block_rows=8)
+    assert int(jnp.max(ids)) < 300
+
+
+def test_fused_heads_matches_model_argmax():
+    """End-to-end: kernel top-1 == argmax of model.all_head_logits."""
+    import jax
+
+    from conftest import tiny_dense
+    from repro.core.heads import heads_apply
+    from repro.models import model as M
+
+    cfg = tiny_dense()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    hidden = _rand((6, cfg.d_model), jnp.float32)
+    logits = M.all_head_logits(params, cfg, hidden)          # (6, K, Vp)
+    want = np.asarray(jnp.argmax(logits, -1))                # (6, K)
+
+    outs = heads_apply(params["bpd_heads"], cfg, hidden,
+                       identity_p1=cfg.bpd_identity_p1)      # (6, K, d)
+    o = outs.reshape(-1, cfg.d_model)
+    w = params["lm_head"]["w"]
+    _, ids = ops.fused_heads_topk(o, w, vocab=cfg.vocab_size, top_t=1,
+                                  block_v=128, block_rows=8)
+    got = np.asarray(ids[:, 0]).reshape(6, cfg.bpd_k)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,148 @@
+"""Model-substrate consistency: the cached decode path must agree with the
+full parallel forward at the same absolute positions — this is what makes
+the BPD verify substep mathematically equal to scoring a longer prefix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import FAMILY_CONFIGS
+from repro.config import DecodeConfig
+from repro.models import model as M
+from repro.models.attention import make_causal_mask
+from repro.models.layers import embed_apply
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+def test_cached_decode_matches_full_forward(family):
+    """Prefill P tokens, then decode-step the next k: hidden states must match
+    a single full forward over P+k tokens."""
+    cfg = FAMILY_CONFIGS[family]()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    p_len, k = 7, 4
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, p_len + k), 0,
+                                cfg.vocab_size)
+    batch_full = {"tokens": tokens}
+    batch_pre = {"tokens": tokens[:, :p_len]}
+    prefix = M.prefix_len(cfg, batch_full)
+
+    # full parallel forward (full-capacity MoE routing, matching the decode
+    # path, which never drops tokens)
+    h_full = M.embed_inputs(params, cfg, batch_full)
+    pos = jnp.arange(h_full.shape[1], dtype=jnp.int32)
+    hid_full, _, _ = M.forward_hidden(params, cfg, h_full, positions=pos,
+                                      moe_full_capacity=True)
+
+    # prefill + cached block step
+    caches = M.init_caches(cfg, 2, prefix + p_len + k + 8, k)
+    h_pre = M.embed_inputs(params, cfg, batch_pre)
+    pos_pre = jnp.arange(h_pre.shape[1], dtype=jnp.int32)
+    _, _, caches = M.forward_hidden(params, cfg, h_pre, positions=pos_pre,
+                                    caches=caches, moe_full_capacity=True)
+    h_blk = embed_apply(params["embed"], tokens[:, p_len:]).astype(
+        cfg.compute_dtype)
+    length = jnp.full((2,), p_len + prefix, jnp.int32)
+    hid_blk, _ = M.decode_block_step(params, cfg, h_blk, caches, length)
+
+    want = np.asarray(hid_full[:, prefix + p_len:, :], np.float32)
+    got = np.asarray(hid_blk, np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_cache_rollback_reproduces_rejected_positions():
+    """Write a speculative block, commit only k̂=2 of 4, then re-decode from
+    the rollback point: results must equal a fresh decode of the accepted
+    prefix (the BPD rejection path)."""
+    cfg = FAMILY_CONFIGS["dense"]()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    b, p_len, k = 2, 6, 4
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, p_len), 0,
+                                cfg.vocab_size)
+    spec1 = jax.random.randint(jax.random.PRNGKey(3), (b, k), 0,
+                               cfg.vocab_size)
+    spec2 = jax.random.randint(jax.random.PRNGKey(4), (b, k), 0,
+                               cfg.vocab_size)
+
+    def prefill():
+        caches = M.init_caches(cfg, b, p_len + 3 * k, k)
+        h = M.embed_inputs(params, cfg, {"tokens": tokens})
+        pos = jnp.arange(p_len, dtype=jnp.int32)
+        _, _, caches = M.forward_hidden(params, cfg, h, positions=pos,
+                                        caches=caches, moe_full_capacity=True)
+        return caches
+
+    khat = jnp.asarray([2, 2], jnp.int32)
+
+    # path A: speculate spec1 (rejected beyond 2), roll back, then spec2
+    caches = prefill()
+    e1 = embed_apply(params["embed"], spec1).astype(cfg.compute_dtype)
+    _, staged = M.decode_block_step(params, cfg, e1, caches,
+                                    jnp.full((b,), p_len, jnp.int32))
+    caches = M.commit_caches(cfg, staged, khat)
+    e2 = embed_apply(params["embed"], spec2).astype(cfg.compute_dtype)
+    hidA, _ = M.decode_block_step(params, cfg, e2, caches,
+                                  jnp.full((b,), p_len + 2, jnp.int32))
+
+    # path B: the accepted prefix was spec1[:, :2] — decode spec2 directly
+    caches = prefill()
+    acc = spec1[:, :2]
+    ea = embed_apply(params["embed"], acc).astype(cfg.compute_dtype)
+    _, staged = M.decode_block_step(params, cfg, ea, caches,
+                                    jnp.full((b,), p_len, jnp.int32))
+    caches = M.commit_caches(cfg, staged, jnp.full((b,), 2, jnp.int32))
+    hidB, _ = M.decode_block_step(params, cfg, e2, caches,
+                                  jnp.full((b,), p_len + 2, jnp.int32))
+
+    np.testing.assert_allclose(np.asarray(hidA, np.float32),
+                               np.asarray(hidB, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_mask():
+    qp = jnp.asarray([[5, 6]])
+    kp = jnp.asarray([jnp.arange(8)])
+    m = make_causal_mask(qp, kp, window=3, num_meta=1)
+    want_q5 = [True, False, False, True, True, True, False, False]
+    want_q6 = [True, False, False, False, True, True, True, False]
+    np.testing.assert_array_equal(np.asarray(m[0, 0]), want_q5)
+    np.testing.assert_array_equal(np.asarray(m[0, 1]), want_q6)
+
+
+def test_stale_positions_masked():
+    m = make_causal_mask(jnp.asarray([[4]]), jnp.asarray([[-1, 2, 4, 9]]))
+    np.testing.assert_array_equal(np.asarray(m[0, 0]),
+                                  [False, True, True, False])
+
+
+def test_chunked_attend_matches_dense():
+    from repro.models.attention import attn_full, attn_init
+
+    cfg = FAMILY_CONFIGS["dense"]()
+    p = attn_init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 50, cfg.d_model))
+    y_dense = attn_full(p, cfg, x)
+    y_chunk = attn_full(p, cfg, x, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_full_capacity_routes_all_tokens():
+    from repro.models.moe import moe_apply, moe_init
+
+    cfg = FAMILY_CONFIGS["moe"]()
+    p = moe_init(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, cfg.d_model))
+    y, metrics = moe_apply(p, cfg, x, full_capacity=True)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(metrics["moe_dropped_frac"]) == 0.0
+
+
+def test_vocab_padding_masked_logits():
+    cfg = FAMILY_CONFIGS["dense"](vocab_size=97)
+    assert cfg.padded_vocab_size == 256
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    h = jax.random.normal(jax.random.PRNGKey(1), (3, cfg.d_model))
+    logits = M.project_vocab(params, cfg, h)
+    assert logits.shape[-1] == 256
+    assert float(jnp.max(logits[:, 97:])) <= -1e8

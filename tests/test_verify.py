@@ -1,0 +1,89 @@
+"""Unit tests for the verification criteria (paper §3, §5.1–§5.3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import DecodeConfig
+from repro.core.verify import accepted_block_size, position_accepts
+
+
+def _logits_for(greedy_rows, vocab=11, second=None):
+    """p1 logits whose argmax per slot is given; optional runner-up."""
+    g = np.asarray(greedy_rows)
+    b, k = g.shape
+    logits = np.zeros((b, k, vocab), np.float32)
+    for i in range(b):
+        for j in range(k):
+            logits[i, j, g[i, j]] = 5.0
+            if second is not None:
+                logits[i, j, second[i][j]] = 3.0
+    return jnp.asarray(logits)
+
+
+def test_exact_first_column_always_true():
+    props = jnp.asarray([[3, 4, 5, 6]])
+    logits = _logits_for([[9, 9, 9, 9]])  # nothing matches
+    acc = position_accepts(props, logits, DecodeConfig(criterion="exact"))
+    np.testing.assert_array_equal(np.asarray(acc), [[True, False, False, False]])
+
+
+def test_exact_prefix_semantics():
+    # slot i-1 verifies proposal i: greedy [4,5,9] vs proposals [_,4,5,6]
+    props = jnp.asarray([[7, 4, 5, 6]])
+    logits = _logits_for([[4, 5, 9, 0]])
+    acc = position_accepts(props, logits, DecodeConfig(criterion="exact"))
+    np.testing.assert_array_equal(np.asarray(acc), [[True, True, True, False]])
+    khat = accepted_block_size(acc, DecodeConfig(), jnp.asarray([100]))
+    assert int(khat[0]) == 3
+
+
+def test_prefix_stops_at_first_reject():
+    acc = jnp.asarray([[True, False, True, True]])
+    khat = accepted_block_size(acc, DecodeConfig(), jnp.asarray([100]))
+    assert int(khat[0]) == 1  # holes don't count (longest *prefix*)
+
+
+def test_topk_accepts_runner_up():
+    props = jnp.asarray([[7, 2, 2]])
+    logits = _logits_for([[4, 4, 4]], second=[[2, 3, 3]])
+    exact = position_accepts(props, logits, DecodeConfig(criterion="exact"))
+    top2 = position_accepts(props, logits,
+                            DecodeConfig(criterion="topk", top_k=2))
+    assert not bool(exact[0, 1])
+    assert bool(top2[0, 1])       # 2 is the runner-up at slot 0
+    assert not bool(top2[0, 2])   # but not at slot 1
+
+
+def test_distance_criterion_ordinal():
+    props = jnp.asarray([[7, 100, 120]])
+    logits = _logits_for([[98, 110, 0]], vocab=130)
+    d2 = position_accepts(props, logits,
+                          DecodeConfig(criterion="distance", epsilon=2.0))
+    d10 = position_accepts(props, logits,
+                           DecodeConfig(criterion="distance", epsilon=10.0))
+    np.testing.assert_array_equal(np.asarray(d2), [[True, True, False]])
+    np.testing.assert_array_equal(np.asarray(d10), [[True, True, True]])
+
+
+def test_min_block_size():
+    acc = jnp.asarray([[True, False, False, False]])
+    k1 = accepted_block_size(acc, DecodeConfig(min_block=1), jnp.asarray([99]))
+    k3 = accepted_block_size(acc, DecodeConfig(min_block=3), jnp.asarray([99]))
+    assert int(k1[0]) == 1 and int(k3[0]) == 3
+
+
+def test_remaining_clamps_khat():
+    acc = jnp.asarray([[True, True, True, True]])
+    khat = accepted_block_size(acc, DecodeConfig(), jnp.asarray([2]))
+    assert int(khat[0]) == 2
+
+
+@pytest.mark.parametrize("criterion", ["exact", "topk", "distance"])
+def test_khat_at_least_one(criterion):
+    rng = np.random.default_rng(1)
+    props = jnp.asarray(rng.integers(0, 11, (8, 6)), jnp.int32)
+    logits = jnp.asarray(rng.normal(size=(8, 6, 11)), jnp.float32)
+    dec = DecodeConfig(criterion=criterion, top_k=2, epsilon=1.0)
+    acc = position_accepts(props, logits, dec)
+    khat = accepted_block_size(acc, dec, jnp.full((8,), 100))
+    assert np.all(np.asarray(khat) >= 1) and np.all(np.asarray(khat) <= 6)
