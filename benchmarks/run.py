@@ -9,13 +9,29 @@ under experiments/.
   roofline— aggregated dry-run roofline terms (EXPERIMENTS.md §Roofline)
 
 ``--quick`` runs reduced step counts (CI-sized); default is the full
-CPU-scale reproduction (~30-45 min).
+CPU-scale reproduction (~30-45 min).  ``--smoke`` runs only the
+seconds-scale subset (kernels + roofline) — the CI benchmark-smoke job
+pairs it with ``benchmarks/serve_throughput.py --smoke``.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import os
 import sys
+
+# script mode (`python benchmarks/run.py`) puts benchmarks/ itself on
+# sys.path, not the repo root — add the root so `benchmarks.*` imports
+# (here and inside the table modules) resolve in both invocation modes
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
 import time
+
+
+def _bench_module(name: str):
+    return importlib.import_module(f"benchmarks.{name}")
 
 
 def bench_kernels(emit):
@@ -50,6 +66,9 @@ def main():
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset only (kernels + roofline) — "
+                         "used by the CI benchmark-smoke job")
     ap.add_argument("--fresh", action="store_true",
                     help="re-run the table experiments even when a cached "
                          "experiments/tableN.json exists")
@@ -58,6 +77,11 @@ def main():
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
         "table1", "table2", "table4", "kernels", "roofline"}
+    if args.smoke:
+        which &= {"kernels", "roofline"}
+        if not which:
+            raise SystemExit(f"--smoke only covers kernels/roofline; "
+                             f"--only {args.only} selects none of them")
 
     def emit(name, value, derived=""):
         print(f"{name},{value},{derived}", flush=True)
@@ -71,7 +95,7 @@ def main():
     if "table1" in which:
         res = cached("experiments/table1.json")
         if res is None:
-            from benchmarks import table1_block_size as t1
+            t1 = _bench_module("table1_block_size")
             res = (t1.run(ks=(2, 4), pretrain_steps=250, head_steps=200,
                           n_distill_batches=16)
                    if args.quick else t1.run())
@@ -82,7 +106,7 @@ def main():
     if "table2" in which:
         res = cached("experiments/table2.json")
         if res is None:
-            from benchmarks import table2_distance as t2
+            t2 = _bench_module("table2_distance")
             res = (t2.run(ks=(2, 4), pretrain_steps=250, head_steps=200)
                    if args.quick else t2.run())
         for key, r in sorted(res.items()):
@@ -92,7 +116,7 @@ def main():
     if "table4" in which:
         res = cached("experiments/table4.json")
         if res is None:
-            from benchmarks import table4_wallclock as t4
+            t4 = _bench_module("table4_wallclock")
             res = (t4.run(ks=(1, 2, 4), pretrain_steps=250, head_steps=200)
                    if args.quick else t4.run())
         for key, r in sorted(res.items()):
@@ -104,7 +128,7 @@ def main():
         bench_kernels(emit)
 
     if "roofline" in which:
-        from benchmarks import roofline
+        roofline = _bench_module("roofline")
         sys.argv = ["roofline"]
         roofline.main()
 

@@ -1,0 +1,246 @@
+"""Serving throughput: continuous batching vs run-to-completion batching.
+
+Replays the same mixed-length Poisson workload through both serving modes
+on the same model:
+
+  * engine — the slot-based continuous-batching engine (repro.serving):
+    finished requests are evicted and queued ones admitted mid-flight, so
+    a slot never idles while work is waiting.
+  * static — run-to-completion ``bpd_decode``: FCFS batches of
+    ``num_slots`` requests, each batch held resident until its slowest row
+    finishes (per-row budgets via ``max_new_rows``, so rows do stop at
+    their own length — the waste is the dead slots, not extra tokens).
+
+Reports aggregate tokens/sec and p50/p95 request latency for both, plus
+the engine's jit cache sizes (the recompilation regression guard: admit /
+step / evict must each compile exactly once regardless of traffic).
+
+Device-work accounting is symmetric: ``model_calls`` counts jitted
+forward executions over the full batch width — prefill + decode
+iterations per static batch, admits + engine steps for the engine — so
+``tokens_per_model_call`` compares the two modes on identical terms
+(idle engine slots and dummy static rows both count against their mode).
+Per-request k̂ is only reported for the engine, where per-request
+iteration counts exist.
+
+Prompts all use ``max_prompt_len`` tokens because the static baseline
+conditions on its whole padded prompt buffer; the length mix that matters
+for continuous batching is in ``max_new``.
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
+
+``--smoke`` runs a seconds-scale configuration for CI (correctness and
+compile-count checks, not a performance measurement).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import DecodeConfig, ModelConfig
+from repro.core import decode as D
+from repro.models import model as M
+from repro.serving import (
+    ContinuousBatchingEngine,
+    EngineConfig,
+    Request,
+    Scheduler,
+    aggregate_stats,
+)
+from repro.serving.types import percentile
+
+
+def bench_model(smoke: bool) -> ModelConfig:
+    if smoke:
+        return ModelConfig(name="serve-smoke", num_layers=2, d_model=64,
+                           num_heads=4, num_kv_heads=2, d_ff=128,
+                           vocab_size=97, bpd_k=4, max_seq_len=512,
+                           dtype="float32")
+    return ModelConfig(name="serve-bench", num_layers=4, d_model=256,
+                       num_heads=8, num_kv_heads=4, d_ff=512,
+                       vocab_size=512, bpd_k=8, max_seq_len=2048,
+                       dtype="float32")
+
+
+def make_workload(rng, n: int, rate: float, prompt_len: int, vocab: int,
+                  budgets) -> list:
+    """n requests, Poisson arrivals at ``rate`` req/s, max_new drawn from
+    ``budgets`` (the mixed-length aspect that static batching wastes on)."""
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=prompt_len),
+                    max_new=int(rng.choice(budgets)),
+                    arrival=float(arrivals[i]))
+            for i in range(n)]
+
+
+def _rebase(reqs, t0: float) -> list:
+    return [dataclasses.replace(r, arrival=t0 + r.arrival) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+
+
+def run_engine(params, cfg, dec, ecfg, reqs):
+    eng = ContinuousBatchingEngine(params, cfg, dec, ecfg)
+    # warm-up: compile admit/step/evict outside the measured window
+    warm = Scheduler(eng)
+    warm.submit(Request(rid=-1, prompt=np.zeros(ecfg.max_prompt_len,
+                                                np.int32), max_new=2))
+    warm.run()
+
+    sched = Scheduler(eng)
+    admits0, steps0 = eng.num_admits, eng.num_steps   # exclude the warm-up
+    t0 = time.monotonic()
+    for r in _rebase(reqs, t0):
+        sched.submit(r)
+    finished = sched.run()
+    wall = time.monotonic() - t0
+    stats = aggregate_stats(finished, wall)
+    stats["model_calls"] = ((eng.num_admits - admits0)
+                            + (eng.num_steps - steps0))
+    stats["tokens_per_model_call"] = (stats["total_tokens"]
+                                      / max(stats["model_calls"], 1))
+    stats["compile_counts"] = eng.compile_counts()
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Static run-to-completion baseline
+# ---------------------------------------------------------------------------
+
+
+def run_static(params, cfg, dec, ecfg, reqs):
+    """FCFS batches of num_slots through bpd_decode; a batch's requests all
+    complete when its slowest row does."""
+    s = ecfg.num_slots
+
+    @jax.jit
+    def decode(batch, budgets):
+        return D.bpd_decode(params, cfg, dec, batch, max_new_rows=budgets)
+
+    dummy = {"tokens": jnp.zeros((s, ecfg.max_prompt_len), jnp.int32)}
+    jax.block_until_ready(decode(dummy, jnp.ones((s,), jnp.int32)))  # compile
+
+    t0 = time.monotonic()
+    queue = sorted(_rebase(reqs, t0), key=lambda r: r.arrival)
+    total_tokens = 0
+    model_calls = 0
+    latencies = []
+    while queue:
+        now = time.monotonic()
+        if queue[0].arrival > now:
+            time.sleep(queue[0].arrival - now)
+            now = time.monotonic()
+        take = [r for r in queue if r.arrival <= now][:s]
+        queue = [r for r in queue if r not in take]
+        prompts = np.zeros((s, ecfg.max_prompt_len), np.int32)
+        budgets = np.ones((s,), np.int32)          # dummy rows: 1 token
+        for i, r in enumerate(take):
+            prompts[i] = r.prompt
+            budgets[i] = min(r.max_new, ecfg.max_new_cap)
+        _, st = decode({"tokens": jnp.asarray(prompts)},
+                       jnp.asarray(budgets))
+        jax.block_until_ready(st["generated"])
+        end = time.monotonic()
+        gen = np.asarray(st["generated"])
+        model_calls += int(st["invocations"])   # prefill + iterations
+        for i, r in enumerate(take):
+            total_tokens += int(gen[i])
+            latencies.append(end - r.arrival)
+    wall = time.monotonic() - t0
+    return {
+        "requests": len(reqs),
+        "total_tokens": total_tokens,
+        "model_calls": model_calls,
+        "tokens_per_model_call": total_tokens / max(model_calls, 1),
+        "tokens_per_sec": total_tokens / wall if wall else 0.0,
+        "latency_p50_s": percentile(latencies, 50),
+        "latency_p95_s": percentile(latencies, 95),
+        "wall_seconds": wall,
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def run(smoke: bool = False, requests: int = 48, slots: int = 8,
+        rate: float = 100.0, seed: int = 0) -> dict:
+    cfg = bench_model(smoke)
+    if smoke:
+        requests, slots, rate = min(requests, 10), min(slots, 4), 200.0
+    dec = DecodeConfig(max_new_tokens=0, block_k=cfg.bpd_k)
+    ecfg = EngineConfig(num_slots=slots,
+                        max_prompt_len=8 if smoke else 16,
+                        max_new_cap=16 if smoke else 64)
+    dec = dec.replace(max_new_tokens=ecfg.max_new_cap)
+    budgets = (2, 16) if smoke else (4, 16, 64)
+    rng = np.random.default_rng(seed)
+    reqs = make_workload(rng, requests, rate, ecfg.max_prompt_len,
+                         cfg.vocab_size, budgets)
+    params = M.init(jax.random.PRNGKey(seed), cfg)
+
+    engine_stats = run_engine(params, cfg, dec, ecfg, reqs)
+    static_stats = run_static(params, cfg, dec, ecfg, reqs)
+    return {
+        "config": {"requests": requests, "slots": slots, "rate": rate,
+                   "budgets": list(budgets), "model": cfg.name,
+                   "smoke": smoke},
+        "engine": engine_stats,
+        "static": static_stats,
+        "speedup_tokens_per_sec": (engine_stats["tokens_per_sec"]
+                                   / max(static_stats["tokens_per_sec"],
+                                         1e-9)),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run (correctness + compile "
+                         "counts, not a perf measurement)")
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="Poisson arrival rate, requests/sec")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    res = run(smoke=args.smoke, requests=args.requests, slots=args.slots,
+              rate=args.rate, seed=args.seed)
+
+    for mode in ("engine", "static"):
+        st = res[mode]
+        for key in ("tokens_per_sec", "latency_p50_s", "latency_p95_s",
+                    "model_calls", "tokens_per_model_call", "wall_seconds"):
+            print(f"serve/{mode}/{key},{st[key]},", flush=True)
+    print(f"serve/engine/mean_accepted,{res['engine']['mean_accepted']},"
+          f"per_request_khat")
+    print(f"serve/speedup_tokens_per_sec,{res['speedup_tokens_per_sec']:.3f},"
+          f"engine_vs_static")
+
+    cc = res["engine"]["compile_counts"]
+    if any(v != 1 for v in cc.values()):
+        raise SystemExit(f"RECOMPILATION REGRESSION: engine jit cache sizes "
+                         f"{cc} (expected 1 each)")
+    print(f"serve/engine/compile_counts,{cc},ok")
+
+    os.makedirs("experiments", exist_ok=True)
+    # smoke runs get their own artifact so a CI-sized run never clobbers
+    # saved full-benchmark numbers
+    name = "serve_throughput_smoke" if args.smoke else "serve_throughput"
+    with open(f"experiments/{name}.json", "w") as f:
+        json.dump(res, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

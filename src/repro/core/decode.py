@@ -73,8 +73,18 @@ class BPDState(NamedTuple):
 
 def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
                   backend: Backend, state: BPDState, *,
-                  prefix_offset: int, prompt_len, max_new: int) -> BPDState:
-    """One combined predict/verify/accept step."""
+                  prefix_offset: int, max_new, prompt_len=None,
+                  active=None) -> BPDState:
+    """One combined predict/verify/accept step.
+
+    max_new : int or (B,) int32 — per-row generation budget (the serving
+              engine gives every slot its own request budget).
+    active  : optional (B,) bool — rows with ``active == False`` are slots
+              holding no request (continuous batching): they accept nothing,
+              write nothing, and keep their state frozen exactly like
+              finished rows.
+    """
+    del prompt_len  # kept for call-site compatibility; unused
     block_k = dec.block_k or cfg.bpd_k
     b = state.proposals.shape[0]
     pos_len = state.text_len + prefix_offset
@@ -90,7 +100,8 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
     accepts = position_accepts(state.proposals, p1_logits, dec)
     remaining = jnp.maximum(max_new - state.generated, 1)
     khat = accepted_block_size(accepts, dec, remaining)     # (B,) in [1, k]
-    khat = jnp.where(state.finished, 0, khat)
+    frozen = state.finished if active is None else (state.finished | ~active)
+    khat = jnp.where(frozen, 0, khat)
 
     # ---- EOS handling -------------------------------------------------------
     if dec.eos_id >= 0:
@@ -119,7 +130,7 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
     head_argmax = jnp.argmax(logits, axis=-1)               # (B, k, K)
     slot = jnp.maximum(khat - 1, 0)[:, None, None]
     proposals = jnp.take_along_axis(head_argmax, slot, axis=1)[:, 0, :]
-    proposals = jnp.where(state.finished[:, None], state.proposals, proposals)
+    proposals = jnp.where(frozen[:, None], state.proposals, proposals)
 
     return BPDState(
         tokens=tokens,
@@ -172,18 +183,24 @@ def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
 
 
 def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
-               backend: Optional[Backend] = None, kv_chunk: int = 0
+               backend: Optional[Backend] = None, kv_chunk: int = 0,
+               max_new_rows: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, Dict]:
     """Full blockwise parallel decode for the decoder-only model.
 
     Returns (tokens (B, buf), stats).  stats["mean_accepted"] is the paper's
     headline metric; stats["invocations"] counts model calls (prefill + loop).
+
+    max_new_rows: optional (B,) int32 per-row budgets ≤ dec.max_new_tokens —
+    rows stop at their own budget (static-batch serving baseline), while the
+    buffers stay sized by dec.max_new_tokens.
     """
     max_new = dec.max_new_tokens
     state, prefix = bpd_prefill_causal_lm(params, cfg, dec, batch,
                                           max_new=max_new, kv_chunk=kv_chunk)
     prompt_len = batch["tokens"].shape[1]
     be = backend or causal_lm_backend(cfg, kv_chunk=kv_chunk)
+    row_budget = max_new if max_new_rows is None else max_new_rows
 
     def cond(s: BPDState):
         return (~jnp.all(s.finished)) & (s.iters < max_new)
@@ -191,7 +208,7 @@ def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
     def body(s: BPDState):
         return bpd_iteration(params, cfg, dec, be, s,
                              prefix_offset=prefix, prompt_len=prompt_len,
-                             max_new=max_new)
+                             max_new=row_budget)
 
     final = jax.lax.while_loop(cond, body, state)
     stats = {

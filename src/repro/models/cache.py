@@ -23,6 +23,7 @@ from __future__ import annotations
 
 from typing import Dict
 
+import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
@@ -51,6 +52,44 @@ def rwkv_cache_init(batch: int, d_model: int, num_heads: int, head_dim: int, dty
         "shift_cm": jnp.zeros((batch, d_model), dtype),   # channel-mix token shift
         "state": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
     }
+
+
+def reset_rows(cache: Dict, mask: jnp.ndarray) -> Dict:
+    """Invalidate the cache rows selected by ``mask`` ((B,) bool).
+
+    This is the slot-recycling primitive for continuous-batching serving:
+    an evicted request's KV slots get ``pos = -1`` (never-written, masked out
+    of every attention) and its recurrent states return to zero, so the row
+    can host a freshly admitted request.  K/V values themselves are left in
+    place — with ``pos = -1`` they are unreachable, and the admit prefill
+    overwrites the whole row anyway.
+    """
+    out = dict(cache)
+    if "attn" in cache:
+        a = dict(cache["attn"])
+        a["pos"] = jnp.where(mask[:, None], -1, a["pos"])
+        out["attn"] = a
+    for key in ("tm", "mamba"):
+        if key in cache:
+            out[key] = {
+                k: jnp.where(mask.reshape((-1,) + (1,) * (v.ndim - 1)),
+                             jnp.zeros_like(v), v)
+                for k, v in cache[key].items()
+            }
+    return out
+
+
+def scatter_row(cache: Dict, row_cache: Dict, slot) -> Dict:
+    """Write a batch-1 cache (``row_cache``) into row ``slot`` of ``cache``.
+
+    Used by the serving engine to prefill an admitted request into a freed
+    slot while the other slots keep decoding.  Leaf structures must match
+    (same layers / buffer lengths); ``slot`` may be a traced int32 scalar.
+    """
+    return jax.tree_util.tree_map(
+        lambda full, row: jax.lax.dynamic_update_index_in_dim(
+            full, row[0].astype(full.dtype), slot, 0),
+        cache, row_cache)
 
 
 def attn_buf_len(cfg: ModelConfig, layer_idx: int, context_len: int, block_k: int) -> int:

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.core.heads import heads_apply, heads_init
+from repro.models import cache as cache_lib
 from repro.models.blocks import (
     block_cached,
     block_cache_init,
@@ -166,6 +167,19 @@ def init_caches(cfg: ModelConfig, batch: int, context_len: int, block_k: int,
     dtype = dtype or cfg.compute_dtype
     return tuple(block_cache_init(cfg, i, batch, context_len, block_k, dtype)
                  for i in range(cfg.num_layers))
+
+
+def reset_cache_rows(caches, mask):
+    """Invalidate rows ``mask`` ((B,) bool) across every layer's cache —
+    slot eviction for the continuous-batching serving engine."""
+    return tuple(cache_lib.reset_rows(c, mask) for c in caches)
+
+
+def scatter_cache_row(caches, row_caches, slot):
+    """Insert a batch-1 cache pytree into row ``slot`` of a batched cache —
+    prefill-into-freed-slot for the continuous-batching serving engine."""
+    return tuple(cache_lib.scatter_row(c, rc, slot)
+                 for c, rc in zip(caches, row_caches))
 
 
 # ---------------------------------------------------------------------------

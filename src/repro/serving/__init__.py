@@ -1,0 +1,20 @@
+"""Continuous-batching serving for blockwise parallel decoding.
+
+Layering:
+  types.py     — Request / FinishedRequest / EngineConfig
+  engine.py    — SlotBatch device state + compiled admit/step/evict
+  scheduler.py — queue, admission policy, workload driver, stats
+"""
+from repro.serving.engine import ContinuousBatchingEngine, SlotBatch
+from repro.serving.scheduler import Scheduler, aggregate_stats
+from repro.serving.types import EngineConfig, FinishedRequest, Request
+
+__all__ = [
+    "ContinuousBatchingEngine",
+    "SlotBatch",
+    "Scheduler",
+    "aggregate_stats",
+    "EngineConfig",
+    "FinishedRequest",
+    "Request",
+]

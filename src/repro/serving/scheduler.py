@@ -1,0 +1,123 @@
+"""Admission scheduler for the continuous-batching engine.
+
+The scheduler owns the request queue and the admission policy; the engine
+owns the device slots.  One ``step()`` is the unit of serving work a
+production loop would run: admit every eligible queued request into free
+slots, then run one BPD iteration over the slot batch and retire whatever
+finished.
+
+Policies:
+  * ``fcfs`` — first come, first served (arrival order).
+  * ``sjf``  — shortest job first by requested ``max_new``; reduces mean
+               latency under mixed-length traffic at the cost of fairness.
+
+``run()`` drives a whole workload to completion on a real clock: requests
+with future arrival times are invisible until the clock reaches them
+(Poisson open-loop traffic in benchmarks/serve_throughput.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.types import FinishedRequest, Request, percentile
+
+POLICIES = ("fcfs", "sjf")
+
+
+class Scheduler:
+    def __init__(self, engine: ContinuousBatchingEngine,
+                 policy: str = "fcfs"):
+        if policy not in POLICIES:
+            raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        self.engine = engine
+        self.policy = policy
+        self.queue: List[Request] = []
+        self.finished: List[FinishedRequest] = []
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Enqueue a request; invalid requests are rejected here, before
+        they can abort the serving loop mid-drain."""
+        p = len(req.prompt)
+        cap = self.engine.ecfg.max_prompt_len
+        if not 0 < p <= cap:
+            raise ValueError(
+                f"request {req.rid}: prompt length {p} outside (0, {cap}]")
+        if req.arrival is None:
+            req.arrival = time.monotonic()
+        self.queue.append(req)
+
+    def pending(self, now: Optional[float] = None) -> List[Request]:
+        """Requests that have arrived and await a slot."""
+        if now is None:
+            now = time.monotonic()
+        return [r for r in self.queue if r.arrival <= now]
+
+    def _pop_next(self, now: float) -> Optional[Request]:
+        eligible = [r for r in self.queue if r.arrival <= now]
+        if not eligible:
+            return None
+        if self.policy == "sjf":
+            pick = min(eligible, key=lambda r: (r.max_new, r.arrival))
+        else:
+            pick = min(eligible, key=lambda r: (r.arrival, r.rid))
+        self.queue.remove(pick)
+        return pick
+
+    # -- serving loop --------------------------------------------------------
+
+    def step(self, now: Optional[float] = None) -> List[FinishedRequest]:
+        """Admit eligible requests into free slots, then one engine step."""
+        t = time.monotonic() if now is None else now
+        for _ in range(len(self.engine.free_slots())):
+            req = self._pop_next(t)
+            if req is None:
+                break
+            self.engine.admit(req, now=now)
+        if not self.engine.has_active():
+            return []
+        done = self.engine.step(now=now)
+        self.finished.extend(done)
+        return done
+
+    def drained(self) -> bool:
+        return not self.queue and not self.engine.has_active()
+
+    def run(self, max_steps: int = 100_000) -> List[FinishedRequest]:
+        """Drive until every submitted request has been served."""
+        steps = 0
+        while not self.drained():
+            if steps >= max_steps:
+                raise RuntimeError(f"scheduler did not drain in {max_steps} "
+                                   f"steps ({len(self.queue)} queued)")
+            now = time.monotonic()
+            if not self.engine.has_active() and not self.pending(now):
+                # idle: sleep until the next arrival
+                nxt = min(r.arrival for r in self.queue)
+                time.sleep(max(nxt - now, 0.0))
+                continue
+            self.step()
+            steps += 1
+        return self.finished
+
+
+def aggregate_stats(finished: List[FinishedRequest],
+                    wall_seconds: float) -> Dict:
+    """Serving-level summary: aggregate throughput + latency percentiles."""
+    lat = [f.latency for f in finished]
+    total_tokens = sum(f.generated for f in finished)
+    total_inv = sum(f.invocations for f in finished)
+    return {
+        "requests": len(finished),
+        "total_tokens": total_tokens,
+        "total_invocations": total_inv,
+        "tokens_per_sec": total_tokens / wall_seconds if wall_seconds else 0.0,
+        "mean_accepted": (sum(f.mean_accepted for f in finished)
+                          / len(finished)) if finished else 0.0,
+        "latency_p50_s": percentile(lat, 50),
+        "latency_p95_s": percentile(lat, 95),
+        "wall_seconds": wall_seconds,
+    }

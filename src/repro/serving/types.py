@@ -1,0 +1,70 @@
+"""Request/response and configuration types for the continuous-batching
+BPD serving engine.
+
+A ``Request`` is one decode job (prompt + generation budget).  The engine
+holds ``EngineConfig.num_slots`` requests in flight at once; finished slots
+are evicted and refilled from the scheduler queue without recompiling
+(static batch shape, per-slot active mask).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static shapes of the serving engine (fixed at compile time)."""
+
+    num_slots: int = 4          # concurrent requests in the device batch
+    max_prompt_len: int = 32    # prompts are padded to this for admission
+    max_new_cap: int = 64       # hard per-request generation budget
+
+
+@dataclasses.dataclass
+class Request:
+    """One decode job submitted to the scheduler.
+
+    ``arrival`` is an absolute ``time.monotonic()`` instant; ``None`` means
+    "now" — the scheduler (or engine, for direct admission) stamps it, so
+    latency = finish - arrival is always well-defined.
+    """
+
+    rid: int
+    prompt: np.ndarray          # (P,) int32 token ids, P <= max_prompt_len
+    max_new: int                # requested tokens, clamped to max_new_cap
+    arrival: Optional[float] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    """A retired request with its serving statistics."""
+
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray          # generated tokens only (no prompt)
+    generated: int              # accepted tokens
+    invocations: int            # model calls spent (prefill + iterations)
+    mean_accepted: float        # k̂ for this request (generated / iterations)
+    arrival: float
+    admit_time: float
+    finish_time: float
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival
+
+    @property
+    def queue_delay(self) -> float:
+        return self.admit_time - self.arrival
+
+
+def percentile(values, q: float) -> Optional[float]:
+    if not values:
+        return None
+    return float(np.percentile(np.asarray(values, np.float64), q))

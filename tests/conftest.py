@@ -9,6 +9,14 @@ import pytest
 from repro.config import DecodeConfig, ModelConfig
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long property-based tests (CI runs -m 'not slow' "
+        "per push; the full suite runs nightly)")
+    config.addinivalue_line(
+        "markers", "serving: continuous-batching serving engine tests")
+
+
 def tiny_dense(**kw) -> ModelConfig:
     base = dict(name="tiny-dense", num_layers=2, d_model=64, num_heads=4,
                 num_kv_heads=2, d_ff=128, vocab_size=97, bpd_k=4,

@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hyp import given, settings, st
 from conftest import FAMILY_CONFIGS, tiny_seq2seq
 from repro.config import DecodeConfig
 from repro.core import decode as D
@@ -31,6 +31,7 @@ def _decode_pair(cfg, seed, b, prompt_len, max_new, k, eos=-1):
             np.asarray(bs["text_len"]), np.asarray(gs["text_len"]), bs)
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 10_000), k=st.integers(2, 6),
        family=st.sampled_from(sorted(FAMILY_CONFIGS)))

@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _hyp import given, settings, st
 from conftest import tiny_dense
 from repro.config import TrainConfig
 from repro.data.synthetic import CipherMT, MarkovLM, MaskedFrames, OrdinalCurves
@@ -168,6 +168,7 @@ def test_param_specs_cover_every_leaf():
     assert all(isinstance(s, P) for s in leaves)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(dim0=st.integers(1, 64), dim1=st.integers(1, 64),
        axis=st.sampled_from([2, 4, 8]))
