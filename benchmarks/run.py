@@ -83,7 +83,10 @@ def main():
             raise SystemExit(f"--smoke only covers kernels/roofline; "
                              f"--only {args.only} selects none of them")
 
+    rows = {}
+
     def emit(name, value, derived=""):
+        rows[name] = value
         print(f"{name},{value},{derived}", flush=True)
 
     def cached(path):
@@ -131,6 +134,15 @@ def main():
         roofline = _bench_module("roofline")
         sys.argv = ["roofline"]
         roofline.main()
+
+    # repo-root perf-trajectory artifact (committed, so the smoke numbers
+    # are diffable PR over PR; serve_throughput.py writes BENCH_serve.json).
+    # Only the smoke configuration writes it — full/--only runs must never
+    # clobber the committed baseline with non-comparable rows.
+    if args.smoke:
+        with open(os.path.join(_ROOT, "BENCH_decode.json"), "w") as f:
+            json.dump({"smoke": True, "which": sorted(which), "rows": rows},
+                      f, indent=2, default=str)
 
 
 if __name__ == "__main__":

@@ -45,16 +45,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import DecodeConfig, ModelConfig
-from repro.core import decode as D
 from repro.models import model as M
 from repro.serving import (
     ContinuousBatchingEngine,
+    DecodeSession,
     EngineConfig,
     Request,
     Scheduler,
     aggregate_stats,
 )
 from repro.serving.types import percentile
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def bench_model(smoke: bool) -> ModelConfig:
@@ -120,13 +122,13 @@ def run_engine(params, cfg, dec, ecfg, reqs):
 
 
 def run_static(params, cfg, dec, ecfg, reqs):
-    """FCFS batches of num_slots through bpd_decode; a batch's requests all
-    complete when its slowest row does."""
+    """FCFS batches of num_slots through the run-to-completion decode path
+    (a jitted DecodeSession — the same driver the engine runs on); a batch's
+    requests all complete when its slowest row does."""
     s = ecfg.num_slots
-
-    @jax.jit
-    def decode(batch, budgets):
-        return D.bpd_decode(params, cfg, dec, batch, max_new_rows=budgets)
+    sess = DecodeSession(params, cfg, dec, jit=True)
+    decode = lambda batch, budgets: sess.decode(batch,  # noqa: E731
+                                               max_new_rows=budgets)
 
     dummy = {"tokens": jnp.zeros((s, ecfg.max_prompt_len), jnp.int32)}
     jax.block_until_ready(decode(dummy, jnp.ones((s,), jnp.int32)))  # compile
@@ -240,6 +242,25 @@ def main():
     name = "serve_throughput_smoke" if args.smoke else "serve_throughput"
     with open(f"experiments/{name}.json", "w") as f:
         json.dump(res, f, indent=2, default=str)
+
+    # repo-root perf-trajectory artifact (tracked in git so every PR's smoke
+    # run appends to the history via the diff); full runs keep their own
+    # experiments/ record and never clobber the committed smoke baseline
+    if not args.smoke:
+        return
+    bench = {
+        "smoke": args.smoke,
+        "engine_tokens_per_sec": res["engine"]["tokens_per_sec"],
+        "static_tokens_per_sec": res["static"]["tokens_per_sec"],
+        "speedup_tokens_per_sec": res["speedup_tokens_per_sec"],
+        "engine_tokens_per_model_call": res["engine"]["tokens_per_model_call"],
+        "static_tokens_per_model_call": res["static"]["tokens_per_model_call"],
+        "engine_mean_accepted": res["engine"]["mean_accepted"],
+        "compile_counts": cc,
+        "config": res["config"],
+    }
+    with open(os.path.join(REPO_ROOT, "BENCH_serve.json"), "w") as f:
+        json.dump(bench, f, indent=2, default=str)
 
 
 if __name__ == "__main__":

@@ -11,10 +11,17 @@ accepted block sizes k̂ let every batch row advance at its own rate.
 Model-agnostic: a ``Backend`` bundles the embed / decode-block / head-logits
 functions, with adapters for the decoder-only CausalLM and the paper's
 encoder-decoder MT model.
+
+Placement: every run-to-completion entry point (``bpd_decode``,
+``greedy_decode``, ``bpd_decode_seq2seq``) is a thin wrapper over
+``repro.serving.session.DecodeSession`` — the one sharding-aware driver
+shared with the continuous-batching engine.  With no ``mesh``/``session``
+argument the wrappers are trace-transparent (identical to the historical
+eager paths, safe under an outer ``jax.jit``); with a mesh they run jitted
+with explicit in/out shardings from ``repro.sharding.policy``.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -144,8 +151,27 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
 
 
 # ---------------------------------------------------------------------------
-# Full decode: prefill + while_loop over iterations
+# Shared run-to-completion machinery (driven by serving.session.DecodeSession)
 # ---------------------------------------------------------------------------
+
+
+def decode_stats(final) -> Dict:
+    """Decode statistics shared by every run-to-completion entry point.
+
+    ``final`` is any loop-final state with ``iters`` / ``generated`` /
+    ``text_len`` fields (``BPDState`` or ``GreedyState``).
+    ``mean_accepted`` is the paper's headline k̂ metric; ``invocations``
+    counts model calls (prefill + loop iterations).
+    """
+    b = final.generated.shape[0]
+    return {
+        "iterations": final.iters,
+        "generated": final.generated,
+        "mean_accepted": jnp.sum(final.generated)
+        / jnp.maximum(final.iters, 1) / b,
+        "invocations": final.iters + 1,
+        "text_len": final.text_len,
+    }
 
 
 def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
@@ -182,10 +208,72 @@ def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
     return state, prefix
 
 
+def _bpd_decode_impl(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict,
+                     row_budget=None, *, backend: Optional[Backend] = None,
+                     kv_chunk: int = 0,
+                     constrain: Optional[Callable] = None
+                     ) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill + while_loop for the decoder-only model.
+
+    ``constrain`` (set by a mesh-backed ``DecodeSession``) applies sharding
+    constraints to the loop-carried state so GSPMD keeps it partitioned
+    through the whole loop.
+    """
+    max_new = dec.max_new_tokens
+    state, prefix = bpd_prefill_causal_lm(params, cfg, dec, batch,
+                                          max_new=max_new, kv_chunk=kv_chunk)
+    if constrain is not None:
+        state = constrain(state)
+    prompt_len = batch["tokens"].shape[1]
+    be = backend or causal_lm_backend(cfg, kv_chunk=kv_chunk)
+    budget = max_new if row_budget is None else row_budget
+
+    def cond(s: BPDState):
+        return (~jnp.all(s.finished)) & (s.iters < max_new)
+
+    def body(s: BPDState):
+        return bpd_iteration(params, cfg, dec, be, s,
+                             prefix_offset=prefix, prompt_len=prompt_len,
+                             max_new=budget)
+
+    final = jax.lax.while_loop(cond, body, state)
+    return final.tokens, decode_stats(final)
+
+
+def _session_for(params, cfg, dec, *, mesh=None, session=None, kv_chunk=0,
+                 backend=None):
+    """Resolve the DecodeSession a wrapper should run through.
+
+    When ``session`` is given it takes precedence — its (possibly
+    mesh-placed) params are used, so the ``params`` argument is ignored by
+    design; cfg/dec however must MATCH the session's, or the caller would
+    silently decode under a different geometry/criterion than requested.
+    Otherwise a lightweight local session is built — with mesh=None that
+    is trace-transparent and allocation-free.
+    """
+    if session is not None:
+        if session.cfg is not cfg and session.cfg != cfg:
+            raise ValueError(
+                f"session was built for model config "
+                f"{session.cfg.name!r}, called with {cfg.name!r}: build "
+                f"one DecodeSession per model")
+        if session.dec != dec:
+            raise ValueError(
+                f"session was built with {session.dec}, called with "
+                f"{dec}: a session's decode config is fixed at "
+                f"construction — build a new session (or call its "
+                f"methods directly)")
+        return session
+    from repro.serving.session import DecodeSession
+
+    return DecodeSession(params, cfg, dec, mesh=mesh, kv_chunk=kv_chunk,
+                         backend=backend)
+
+
 def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
                backend: Optional[Backend] = None, kv_chunk: int = 0,
-               max_new_rows: Optional[jnp.ndarray] = None
-               ) -> Tuple[jnp.ndarray, Dict]:
+               max_new_rows: Optional[jnp.ndarray] = None,
+               mesh=None, session=None) -> Tuple[jnp.ndarray, Dict]:
     """Full blockwise parallel decode for the decoder-only model.
 
     Returns (tokens (B, buf), stats).  stats["mean_accepted"] is the paper's
@@ -194,32 +282,18 @@ def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
     max_new_rows: optional (B,) int32 per-row budgets ≤ dec.max_new_tokens —
     rows stop at their own budget (static-batch serving baseline), while the
     buffers stay sized by dec.max_new_tokens.
+
+    mesh / session: run through a sharding-aware ``DecodeSession`` — params
+    placed with ``param_shardings``, the loop jitted with explicit in/out
+    shardings.  Default (both None) is the single-device eager path.
+    ``mesh=`` is one-shot: it builds (and discards) a fresh session per
+    call, re-placing params and recompiling — callers decoding more than
+    once should build a ``DecodeSession`` and pass ``session=`` so the
+    placement and per-geometry jit cache persist across calls.
     """
-    max_new = dec.max_new_tokens
-    state, prefix = bpd_prefill_causal_lm(params, cfg, dec, batch,
-                                          max_new=max_new, kv_chunk=kv_chunk)
-    prompt_len = batch["tokens"].shape[1]
-    be = backend or causal_lm_backend(cfg, kv_chunk=kv_chunk)
-    row_budget = max_new if max_new_rows is None else max_new_rows
-
-    def cond(s: BPDState):
-        return (~jnp.all(s.finished)) & (s.iters < max_new)
-
-    def body(s: BPDState):
-        return bpd_iteration(params, cfg, dec, be, s,
-                             prefix_offset=prefix, prompt_len=prompt_len,
-                             max_new=row_budget)
-
-    final = jax.lax.while_loop(cond, body, state)
-    stats = {
-        "iterations": final.iters,
-        "generated": final.generated,
-        "mean_accepted": jnp.sum(final.generated)
-        / jnp.maximum(final.iters, 1) / final.generated.shape[0],
-        "invocations": final.iters + 1,
-        "text_len": final.text_len,
-    }
-    return final.tokens, stats
+    sess = _session_for(params, cfg, dec, mesh=mesh, session=session,
+                        kv_chunk=kv_chunk, backend=backend)
+    return sess.decode(batch, max_new_rows=max_new_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -227,8 +301,10 @@ def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
 # ---------------------------------------------------------------------------
 
 
-def bpd_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
-                       batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+def _bpd_decode_seq2seq_impl(params, cfg: ModelConfig, dec: DecodeConfig,
+                             batch: Dict,
+                             constrain: Optional[Callable] = None
+                             ) -> Tuple[jnp.ndarray, Dict]:
     """batch: {"src": (B, Ss)}.  Decoder stream: BOS (token 0) + output."""
     max_new = dec.max_new_tokens
     block_k = dec.block_k or cfg.bpd_k
@@ -257,6 +333,8 @@ def bpd_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
         iters=jnp.zeros((), jnp.int32),
         generated=jnp.zeros((b,), jnp.int32),
     )
+    if constrain is not None:
+        state = constrain(state)
 
     def cond(s: BPDState):
         return (~jnp.all(s.finished)) & (s.iters < max_new)
@@ -266,21 +344,32 @@ def bpd_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
                              prompt_len=1, max_new=max_new)
 
     final = jax.lax.while_loop(cond, body, state)
-    stats = {
-        "iterations": final.iters,
-        "generated": final.generated,
-        "mean_accepted": jnp.sum(final.generated)
-        / jnp.maximum(final.iters, 1) / b,
-        "invocations": final.iters + 1,
-        "text_len": final.text_len,
-    }
-    return final.tokens[:, 1:], stats  # strip BOS
+    return final.tokens[:, 1:], decode_stats(final)  # strip BOS
+
+
+def bpd_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
+                       batch: Dict, *, mesh=None, session=None
+                       ) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {"src": (B, Ss)}.  Decoder stream: BOS (token 0) + output."""
+    sess = _session_for(params, cfg, dec, mesh=mesh, session=session)
+    return sess.decode_seq2seq(batch)
 
 
 def greedy_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
-                          batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+                          batch: Dict, *, mesh=None, session=None
+                          ) -> Tuple[jnp.ndarray, Dict]:
     """Greedy baseline via BPD machinery with block size 1 (p_1 only)."""
-    return bpd_decode_seq2seq(params, cfg, dec.replace(block_k=1), batch)
+    if session is not None:
+        if (session.dec.block_k or session.cfg.bpd_k) != 1:
+            raise ValueError(
+                f"greedy_decode_seq2seq needs a session built with "
+                f"block_k=1, got block_k="
+                f"{session.dec.block_k or session.cfg.bpd_k}: reusing a "
+                f"BPD session would report blockwise iteration stats as "
+                f"the greedy baseline")
+        return session.decode_seq2seq(batch)
+    return bpd_decode_seq2seq(params, cfg, dec.replace(block_k=1), batch,
+                              mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -289,8 +378,20 @@ def greedy_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
 # ---------------------------------------------------------------------------
 
 
-def greedy_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
-                  kv_chunk: int = 0) -> Tuple[jnp.ndarray, Dict]:
+class GreedyState(NamedTuple):
+    tokens: jnp.ndarray        # (B, buf) prompt+output token buffer
+    text_len: jnp.ndarray      # (B,) tokens valid in the buffer
+    tok: jnp.ndarray           # (B,) next token to commit
+    caches: Any                # per-layer cache pytree
+    finished: jnp.ndarray      # (B,) bool
+    iters: jnp.ndarray         # () int32 — decode steps taken
+    generated: jnp.ndarray     # (B,) int32 — committed tokens so far
+
+
+def _greedy_decode_impl(params, cfg: ModelConfig, dec: DecodeConfig,
+                        batch: Dict, *, kv_chunk: int = 0,
+                        constrain: Optional[Callable] = None
+                        ) -> Tuple[jnp.ndarray, Dict]:
     max_new = dec.max_new_tokens
     prompt = batch["tokens"]
     b, prompt_len = prompt.shape
@@ -308,33 +409,48 @@ def greedy_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
 
     buf = prompt_len + max_new + 1
     tokens = jnp.zeros((b, buf), jnp.int32).at[:, :prompt_len].set(prompt)
+    state = GreedyState(
+        tokens=tokens,
+        text_len=jnp.full((b,), prompt_len, jnp.int32),
+        tok=next_tok.astype(jnp.int32),
+        caches=caches,
+        finished=jnp.zeros((b,), bool),
+        iters=jnp.zeros((), jnp.int32),
+        generated=jnp.zeros((b,), jnp.int32),
+    )
+    if constrain is not None:
+        state = constrain(state)
 
-    def cond(s):
-        tokens, text_len, tok, caches, finished, steps = s
-        return (~jnp.all(finished)) & (steps < max_new)
+    def cond(s: GreedyState):
+        return (~jnp.all(s.finished)) & (s.iters < max_new)
 
-    def body(s):
-        tokens, text_len, tok, caches, finished, steps = s
-        adv = (~finished).astype(jnp.int32)
+    def body(s: GreedyState):
+        adv = (~s.finished).astype(jnp.int32)
         tokens = jax.vmap(lambda bu, i, v, m: bu.at[i].set(
-            jnp.where(m, v, bu[i])))(tokens, text_len, tok, ~finished)
-        h = embed_apply(params["embed"], tok[:, None]).astype(cfg.compute_dtype)
+            jnp.where(m, v, bu[i])))(s.tokens, s.text_len, s.tok, ~s.finished)
+        h = embed_apply(params["embed"], s.tok[:, None]).astype(cfg.compute_dtype)
         hidden, staged = model_lib.decode_block_step(
-            params, cfg, h, caches, text_len + prefix, kv_chunk=kv_chunk)
+            params, cfg, h, s.caches, s.text_len + prefix, kv_chunk=kv_chunk)
         caches = model_lib.commit_caches(cfg, staged, adv)
         logits = model_lib.base_logits(params, cfg, hidden[:, 0, :])
         new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        text_len = text_len + adv
+        text_len = s.text_len + adv
+        finished = s.finished
         if dec.eos_id >= 0:
-            finished = finished | (tok == dec.eos_id)
+            finished = finished | (s.tok == dec.eos_id)
         finished = finished | (text_len - prompt_len >= max_new)
-        tok = jnp.where(finished, tok, new_tok)
-        return (tokens, text_len, tok, caches, finished, steps + 1)
+        tok = jnp.where(finished, s.tok, new_tok)
+        return GreedyState(tokens=tokens, text_len=text_len, tok=tok,
+                           caches=caches, finished=finished,
+                           iters=s.iters + 1, generated=s.generated + adv)
 
-    init = (tokens, jnp.full((b,), prompt_len, jnp.int32),
-            next_tok.astype(jnp.int32), caches, jnp.zeros((b,), bool),
-            jnp.zeros((), jnp.int32))
-    tokens, text_len, _, _, _, steps = jax.lax.while_loop(cond, body, init)
-    stats = {"iterations": steps, "invocations": steps + 1,
-             "generated": text_len - prompt_len, "text_len": text_len}
-    return tokens, stats
+    final = jax.lax.while_loop(cond, body, state)
+    return final.tokens, decode_stats(final)
+
+
+def greedy_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
+                  kv_chunk: int = 0, mesh=None, session=None
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    sess = _session_for(params, cfg, dec, mesh=mesh, session=session,
+                        kv_chunk=kv_chunk)
+    return sess.greedy(batch)

@@ -51,10 +51,9 @@ from repro.models import model as model_lib  # noqa: E402
 from repro.optim import optimizer_init  # noqa: E402
 from repro.sharding import (  # noqa: E402
     batch_specs,
-    cache_specs,
-    data_spec,
     named,
     param_specs,
+    state_specs,
 )
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
@@ -188,32 +187,17 @@ def build_lowering(cfg: ModelConfig, shape_name: str, mesh, *,
         jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
         return jitted, (params_struct, batch)
 
-    # decode: one BPD iteration (serve_step)
+    # decode: one BPD iteration (serve_step) — loop-state specs come from the
+    # same sharding.policy.state_specs builder the DecodeSession uses
     state_struct = steps_lib.serve_state_struct(cfg, dec, batch=b, seq_len=s,
                                                 max_new=64)
-    st_specs = serve_state_specs(cfg, state_struct, mesh, b)
+    st_specs = state_specs(cfg, state_struct, mesh, batch_size=b)
     st_shard = named(mesh, st_specs)
     fn = steps_lib.make_serve_step(cfg, dec, seq_len=s, max_new=64,
                                    kv_chunk=kv_chunk)
     jitted = jax.jit(fn, in_shardings=(p_shard, st_shard),
                      out_shardings=st_shard)
     return jitted, (params_struct, state_struct)
-
-
-def serve_state_specs(cfg: ModelConfig, state_struct, mesh, batch: int):
-    from repro.core.decode import BPDState
-
-    dp = data_spec(mesh, batch, 1)[0]
-    c_specs = cache_specs(cfg, state_struct.caches, mesh, batch)
-    return BPDState(
-        tokens=P(dp, None),
-        text_len=P(dp),
-        proposals=P(dp, None),
-        caches=c_specs,
-        finished=P(dp),
-        iters=P(),
-        generated=P(dp),
-    )
 
 
 # ---------------------------------------------------------------------------

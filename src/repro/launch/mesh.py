@@ -22,12 +22,22 @@ def make_mesh(mc: MeshConfig):
     return jax.make_mesh(mc.shape, mc.axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / local runs)."""
+def make_host_mesh(data: int = 1, model: int = 1, *, require: bool = False):
+    """Small ("data", "model") mesh over whatever devices exist (tests /
+    local runs).  Axes shrink to fit the available device count unless
+    ``require=True`` — then an under-provisioned host raises instead of
+    silently degrading a sharded run to fewer shards (use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to fake N CPU
+    devices)."""
     n = len(jax.devices())
-    data = min(data, n)
-    model = min(model, max(n // data, 1))
-    return jax.make_mesh((data, model), ("data", "model"))
+    d = min(data, n)
+    m = min(model, max(n // d, 1))
+    if require and (d, m) != (data, model):
+        raise RuntimeError(
+            f"host mesh {data}x{model} needs {data * model} devices, have "
+            f"{n} — set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{data * model} before jax initializes")
+    return jax.make_mesh((d, m), ("data", "model"))
 
 
 # Hardware constants for roofline analysis (TPU v5e, per chip)

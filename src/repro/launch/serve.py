@@ -11,6 +11,12 @@ dry-run lowers) on the host devices with the reduced config.
 2×batch mixed-length requests are scheduled through ``--batch`` slots with
 mid-flight admission, printing per-request stats and the aggregate
 tokens/sec + latency summary.
+
+``--mesh-data N --mesh-model M`` runs either mode through a mesh-backed
+``DecodeSession``: params placed by ``sharding.policy.param_shardings``,
+the decode state / slot batch sharded over the data axis and tensors over
+the model axis.  On a CPU host prefix the command with
+``XLA_FLAGS=--xla_force_host_platform_device_count=<N*M>``.
 """
 from __future__ import annotations
 
@@ -23,7 +29,6 @@ import numpy as np
 
 from repro.checkpoint import latest_step, restore
 from repro.config import DecodeConfig, get_config
-from repro.core import decode as D
 from repro.data.synthetic import MarkovLM
 from repro.models import model as M
 
@@ -45,6 +50,10 @@ def main():
                     help="serve through the continuous-batching engine "
                          "(slots + admission) instead of one static batch")
     ap.add_argument("--policy", default="fcfs", choices=["fcfs", "sjf"])
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help="data-parallel shards (0 = no mesh, single device)")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="tensor-parallel shards over the model axis")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True).replace(dtype="float32")
@@ -69,14 +78,23 @@ def main():
         batch["patch_embeds"] = jnp.zeros((args.batch, 4, cfg.d_model),
                                           jnp.float32)
 
+    mesh = None
+    if args.mesh_data > 0:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(args.mesh_data, args.mesh_model, require=True)
+        print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices")
+
     if args.engine:
-        serve_engine(params, cfg, dec, args, task)
+        serve_engine(params, cfg, dec, args, task, mesh=mesh)
         return
 
-    fn = jax.jit(lambda b: D.bpd_decode(params, cfg, dec, b))
-    fn(batch)  # compile
+    # static batch through the same session layer the engine uses —
+    # jitted once (with explicit shardings when a mesh is given)
+    from repro.serving import DecodeSession
+    sess = DecodeSession(params, cfg, dec, mesh=mesh, jit=True)
+    sess.decode(batch)  # compile
     t0 = time.time()
-    toks, stats = fn(batch)
+    toks, stats = sess.decode(batch)
     jax.block_until_ready(toks)
     dt = time.time() - t0
 
@@ -92,7 +110,7 @@ def main():
         print(f"    row {r}: {out}")
 
 
-def serve_engine(params, cfg, dec, args, task):
+def serve_engine(params, cfg, dec, args, task, *, mesh=None):
     """Mixed-length request traffic through the continuous-batching engine."""
     from repro.serving import (ContinuousBatchingEngine, EngineConfig,
                                Request, Scheduler, aggregate_stats)
@@ -100,7 +118,7 @@ def serve_engine(params, cfg, dec, args, task):
     ecfg = EngineConfig(num_slots=args.batch,
                         max_prompt_len=args.prompt_len,
                         max_new_cap=args.max_new)
-    engine = ContinuousBatchingEngine(params, cfg, dec, ecfg)
+    engine = ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh)
     sched = Scheduler(engine, policy=args.policy)
 
     rng = np.random.default_rng(args.seed + 2)

@@ -79,17 +79,27 @@ def reset_rows(cache: Dict, mask: jnp.ndarray) -> Dict:
     return out
 
 
-def scatter_row(cache: Dict, row_cache: Dict, slot) -> Dict:
+def scatter_row(cache: Dict, row_cache: Dict, slot, *, constraint=None) -> Dict:
     """Write a batch-1 cache (``row_cache``) into row ``slot`` of ``cache``.
 
     Used by the serving engine to prefill an admitted request into a freed
     slot while the other slots keep decoding.  Leaf structures must match
     (same layers / buffer lengths); ``slot`` may be a traced int32 scalar.
+
+    ``constraint`` — optional pytree of shardings (NamedSharding /
+    PartitionSpec) mirroring ``cache``.  Under a mesh the slot-index write
+    is a *global* scatter into a batch-sharded buffer; pinning the result
+    keeps GSPMD lowering it as a masked local write on the owning data
+    shard instead of replicating the whole KV buffer around the scatter.
     """
-    return jax.tree_util.tree_map(
+    out = jax.tree_util.tree_map(
         lambda full, row: jax.lax.dynamic_update_index_in_dim(
             full, row[0].astype(full.dtype), slot, 0),
         cache, row_cache)
+    if constraint is not None:
+        out = jax.tree_util.tree_map(jax.lax.with_sharding_constraint,
+                                     out, constraint)
+    return out
 
 
 def attn_buf_len(cfg: ModelConfig, layer_idx: int, context_len: int, block_k: int) -> int:

@@ -175,11 +175,15 @@ def reset_cache_rows(caches, mask):
     return tuple(cache_lib.reset_rows(c, mask) for c in caches)
 
 
-def scatter_cache_row(caches, row_caches, slot):
+def scatter_cache_row(caches, row_caches, slot, *, constraint=None):
     """Insert a batch-1 cache pytree into row ``slot`` of a batched cache —
-    prefill-into-freed-slot for the continuous-batching serving engine."""
-    return tuple(cache_lib.scatter_row(c, rc, slot)
-                 for c, rc in zip(caches, row_caches))
+    prefill-into-freed-slot for the continuous-batching serving engine.
+    ``constraint`` optionally pins per-layer shardings (see cache.scatter_row)
+    so admission stays a shard-local write on a mesh."""
+    if constraint is None:
+        constraint = (None,) * len(caches)
+    return tuple(cache_lib.scatter_row(c, rc, slot, constraint=cn)
+                 for c, rc, cn in zip(caches, row_caches, constraint))
 
 
 # ---------------------------------------------------------------------------

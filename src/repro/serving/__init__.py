@@ -1,16 +1,22 @@
 """Continuous-batching serving for blockwise parallel decoding.
 
 Layering:
-  types.py     — Request / FinishedRequest / EngineConfig
-  engine.py    — SlotBatch device state + compiled admit/step/evict
+  types.py     — Request / FinishedRequest / EngineConfig / SlotBatch
+  session.py   — DecodeSession: sharding-aware owner of params + the jitted
+                 decode functions (shared with core.decode entry points)
+  engine.py    — scheduler + slot-metadata shell over a DecodeSession
   scheduler.py — queue, admission policy, workload driver, stats
 """
-from repro.serving.engine import ContinuousBatchingEngine, SlotBatch
+from repro.serving.engine import ContinuousBatchingEngine
 from repro.serving.scheduler import Scheduler, aggregate_stats
-from repro.serving.types import EngineConfig, FinishedRequest, Request
+from repro.serving.session import DecodeSession, ServingFns
+from repro.serving.types import (EngineConfig, FinishedRequest, Request,
+                                 SlotBatch)
 
 __all__ = [
     "ContinuousBatchingEngine",
+    "DecodeSession",
+    "ServingFns",
     "SlotBatch",
     "Scheduler",
     "aggregate_stats",

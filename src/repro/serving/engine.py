@@ -3,7 +3,8 @@
 The run-to-completion ``bpd_decode`` keeps a whole batch resident until its
 slowest row finishes — dead rows still cost a model invocation per
 iteration.  This engine generalizes ``BPDState`` to a slot-based
-``SlotBatch``: a *static* device batch of ``num_slots`` rows where
+``SlotBatch`` (see serving/types.py): a *static* device batch of
+``num_slots`` rows where
 
   * finished rows are evicted (``active`` goes False) and their KV rows are
     invalidated (``pos = -1``) so the slot is immediately reusable,
@@ -14,53 +15,46 @@ iteration.  This engine generalizes ``BPDState`` to a slot-based
     statistics, so the decode step is one ``bpd_iteration`` over the full
     slot batch with a per-slot ``active`` mask and per-slot ``max_new``.
 
-All three device functions (admit / step / evict) compile exactly once:
-prompts are padded to ``max_prompt_len`` and slot indices are traced int32
-scalars.  Padded prefill is safe because cache visibility is governed by
-absolute positions: a stale entry with stored position p is only attended
-when ``p < length + k``, and the decode step with that length rewrites
-position p in ``cache_write`` *before* attending (see models/cache.py).
-That argument covers KV caches only — recurrent-state families
-(rwkv6 / hymba) would fold pad tokens into their final state, so the
-engine is gated to ``block_type == "attn"``.
+The engine itself is a **scheduler + slot-metadata shell**: all device
+functions (init / admit / step / evict) are owned by a
+``serving.session.DecodeSession`` — the same sharding-aware driver behind
+``bpd_decode`` — and compile exactly once (padded prompts, traced slot
+indices).  Pass ``mesh=`` (or a prebuilt ``session=``) to shard the slot
+batch over the data axes and the model over the tensor axis; the engine's
+host logic is identical in both placements.
+
+Padded prefill is safe because cache visibility is governed by absolute
+positions: a stale entry with stored position p is only attended when
+``p < length + k``, and the decode step with that length rewrites position
+p in ``cache_write`` *before* attending (see models/cache.py).  That
+argument covers KV caches only — recurrent-state families (rwkv6 / hymba)
+would fold pad tokens into their final state, so the engine is gated to
+``block_type == "attn"``.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, List, NamedTuple, Optional
+from typing import List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import DecodeConfig, ModelConfig
-from repro.core import decode as decode_lib
-from repro.models import model as model_lib
-from repro.serving.types import EngineConfig, FinishedRequest, Request
+from repro.serving.session import DecodeSession
+from repro.serving.types import (EngineConfig, FinishedRequest, Request,
+                                 SlotBatch)
+
+__all__ = ["ContinuousBatchingEngine", "SlotBatch"]
 
 I32 = jnp.int32
-
-
-class SlotBatch(NamedTuple):
-    """Device-side state: ``BPDState`` generalized to reusable slots."""
-
-    tokens: jnp.ndarray        # (S, buf) per-slot prompt+output buffer
-    text_len: jnp.ndarray      # (S,) valid tokens in the buffer
-    prompt_len: jnp.ndarray    # (S,) prompt portion of text_len
-    proposals: jnp.ndarray     # (S, k) next-block proposals
-    caches: Any                # per-layer cache pytree (batch dim = S)
-    active: jnp.ndarray        # (S,) bool — slot holds a live request
-    finished: jnp.ndarray      # (S,) bool — request hit EOS / budget
-    generated: jnp.ndarray     # (S,) accepted tokens so far
-    max_new: jnp.ndarray       # (S,) per-slot generation budget
-    invocations: jnp.ndarray   # (S,) model calls spent on this request
 
 
 class ContinuousBatchingEngine:
     """Slot-based continuous batching for the decoder-only BPD loop."""
 
     def __init__(self, params, cfg: ModelConfig, dec: DecodeConfig,
-                 ecfg: EngineConfig):
+                 ecfg: EngineConfig, *, mesh=None,
+                 session: Optional[DecodeSession] = None):
         if cfg.block_type != "attn":
             raise NotImplementedError(
                 f"serving engine requires an attention-cache family "
@@ -73,114 +67,30 @@ class ContinuousBatchingEngine:
         if cfg.is_encoder_only or cfg.is_encoder_decoder:
             raise NotImplementedError("serving engine is decoder-only")
 
-        self.params = params
-        self.cfg = cfg
-        self.dec = dec
+        self.session = session if session is not None else DecodeSession(
+            params, cfg, dec, mesh=mesh)
+        ecfg.validate(dec=self.session.dec, mesh=self.session.mesh)
+
+        # the session is the source of truth for model/decode config — a
+        # caller-provided session may differ from the cfg/dec args, and the
+        # device functions are built from the session's copies
+        self.cfg = cfg = self.session.cfg
+        self.dec = dec = self.session.dec
         self.ecfg = ecfg
         self.block_k = dec.block_k or cfg.bpd_k
         self.prefix = cfg.num_meta_tokens
         self.context_len = self.prefix + ecfg.max_prompt_len + ecfg.max_new_cap
         self.buf_len = ecfg.max_prompt_len + ecfg.max_new_cap + self.block_k
-        self._backend = decode_lib.causal_lm_backend(cfg)
-        self.state = self._init_state()
+        self._fns = self.session.serving_fns(ecfg)
+        self.state = self._fns.init()
         self.slot_meta: List[Optional[dict]] = [None] * ecfg.num_slots
         self.num_admits = 0     # prefill calls — device work accounting
         self.num_steps = 0      # batch iteration calls
 
-        self._admit_fn = jax.jit(self._make_admit_fn())
-        self._step_fn = jax.jit(self._make_step_fn())
-        self._evict_fn = jax.jit(self._make_evict_fn())
-
-    # -- state construction --------------------------------------------------
-
-    def _init_state(self) -> SlotBatch:
-        s, k = self.ecfg.num_slots, self.block_k
-        zeros = lambda: jnp.zeros((s,), I32)
-        return SlotBatch(
-            tokens=jnp.zeros((s, self.buf_len), I32),
-            text_len=zeros(),
-            prompt_len=zeros(),
-            proposals=jnp.zeros((s, k), I32),
-            caches=model_lib.init_caches(self.cfg, s, self.context_len, k),
-            active=jnp.zeros((s,), bool),
-            finished=jnp.ones((s,), bool),   # empty slots read as finished
-            generated=zeros(),
-            max_new=zeros(),
-            invocations=zeros(),
-        )
-
-    # -- compiled device functions ------------------------------------------
-
-    def _make_admit_fn(self):
-        cfg, ecfg = self.cfg, self.ecfg
-        block_k, prefix = self.block_k, self.prefix
-        context_len, buf_len = self.context_len, self.buf_len
-
-        def admit(params, state: SlotBatch, slot, prompt, prompt_len,
-                  max_new) -> SlotBatch:
-            """Prefill one padded prompt into row ``slot``.
-
-            prompt: (max_prompt_len,) int32; slot/prompt_len/max_new are
-            traced int32 scalars so admission never recompiles.
-            """
-            row_caches = model_lib.init_caches(cfg, 1, context_len, block_k)
-            h = model_lib.embed_inputs(params, cfg, {"tokens": prompt[None]})
-            positions = jnp.arange(h.shape[1], dtype=I32)
-            hidden, _, row_caches = model_lib.forward_hidden(
-                params, cfg, h, positions=positions, caches=row_caches,
-                moe_full_capacity=True)
-            last = jax.lax.dynamic_index_in_dim(
-                hidden[0], prefix + prompt_len - 1, axis=0, keepdims=False)
-            logits = model_lib.all_head_logits(params, cfg, last)  # (K, V)
-            proposals = jnp.argmax(logits[:block_k], axis=-1).astype(I32)
-
-            row_tokens = jnp.zeros((buf_len,), I32)
-            row_tokens = row_tokens.at[:ecfg.max_prompt_len].set(prompt)
-            upd = lambda arr, val: arr.at[slot].set(val)
-            return state._replace(
-                tokens=upd(state.tokens, row_tokens),
-                text_len=upd(state.text_len, prompt_len),
-                prompt_len=upd(state.prompt_len, prompt_len),
-                proposals=upd(state.proposals, proposals),
-                caches=model_lib.scatter_cache_row(state.caches,
-                                                   row_caches, slot),
-                active=upd(state.active, True),
-                finished=upd(state.finished, False),
-                generated=upd(state.generated, 0),
-                max_new=upd(state.max_new, max_new),
-                invocations=upd(state.invocations, 1),  # the prefill call
-            )
-
-        return admit
-
-    def _make_step_fn(self):
-        cfg, dec, backend, prefix = self.cfg, self.dec, self._backend, self.prefix
-
-        def step(params, state: SlotBatch) -> SlotBatch:
-            bst = decode_lib.BPDState(
-                tokens=state.tokens, text_len=state.text_len,
-                proposals=state.proposals, caches=state.caches,
-                finished=state.finished, iters=jnp.zeros((), I32),
-                generated=state.generated)
-            out = decode_lib.bpd_iteration(
-                params, cfg, dec, backend, bst, prefix_offset=prefix,
-                max_new=state.max_new, active=state.active)
-            stepped = state.active & ~state.finished
-            return state._replace(
-                tokens=out.tokens, text_len=out.text_len,
-                proposals=out.proposals, caches=out.caches,
-                finished=out.finished, generated=out.generated,
-                invocations=state.invocations + stepped.astype(I32))
-
-        return step
-
-    def _make_evict_fn(self):
-        def evict(state: SlotBatch, mask) -> SlotBatch:
-            return state._replace(
-                active=state.active & ~mask,
-                caches=model_lib.reset_cache_rows(state.caches, mask))
-
-        return evict
+    @property
+    def params(self):
+        """Mesh-placed parameters (owned by the DecodeSession)."""
+        return self.session.params
 
     # -- host-side API -------------------------------------------------------
 
@@ -204,7 +114,7 @@ class ContinuousBatchingEngine:
         prompt = np.zeros((self.ecfg.max_prompt_len,), np.int32)
         prompt[:p] = req.prompt
         max_new = int(np.clip(req.max_new, 1, self.ecfg.max_new_cap))
-        self.state = self._admit_fn(
+        self.state = self._fns.admit(
             self.params, self.state, jnp.asarray(slot, I32),
             jnp.asarray(prompt), jnp.asarray(p, I32),
             jnp.asarray(max_new, I32))
@@ -221,7 +131,7 @@ class ContinuousBatchingEngine:
     def step(self, *, now: Optional[float] = None) -> List[FinishedRequest]:
         """One BPD iteration over all active slots, then harvest+evict."""
         self.num_steps += 1
-        self.state = self._step_fn(self.params, self.state)
+        self.state = self._fns.step(self.params, self.state)
         return self.harvest(now=now)
 
     def harvest(self, *, now: Optional[float] = None) -> List[FinishedRequest]:
@@ -249,7 +159,7 @@ class ContinuousBatchingEngine:
                 arrival=req.arrival, admit_time=meta["admit_time"],
                 finish_time=t))
             self.slot_meta[i] = None
-        self.state = self._evict_fn(self.state, jnp.asarray(done_mask))
+        self.state = self._fns.evict(self.state, jnp.asarray(done_mask))
         return out
 
     # -- diagnostics ---------------------------------------------------------
@@ -258,7 +168,7 @@ class ContinuousBatchingEngine:
         """jit cache sizes — the recompilation regression guard.  Each entry
         must be ≤ 1 after any amount of traffic (static shapes by design)."""
         return {
-            "admit": self._admit_fn._cache_size(),
-            "step": self._step_fn._cache_size(),
-            "evict": self._evict_fn._cache_size(),
+            "admit": self._fns.admit._cache_size(),
+            "step": self._fns.step._cache_size(),
+            "evict": self._fns.evict._cache_size(),
         }

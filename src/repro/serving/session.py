@@ -1,0 +1,364 @@
+"""Mesh-sharded decode sessions: one sharding-aware driver for every decode
+entry point.
+
+A ``DecodeSession`` owns the model parameters (device_put with
+``sharding.policy.param_shardings`` when a mesh is given) and the jitted
+decode functions, each built **once** per geometry from explicit
+``in_shardings`` / ``out_shardings``:
+
+  * run-to-completion — ``decode`` (bpd), ``greedy``, ``decode_seq2seq``:
+    the loop-carried ``BPDState`` / ``GreedyState`` is pinned with
+    ``sharding.policy.state_specs`` (batch over the data axes, caches via
+    ``cache_specs`` — kv-heads or buffer length over ``model``), so GSPMD
+    keeps it partitioned through the whole ``while_loop``.
+  * serving — ``serving_fns(ecfg)`` returns the engine's compile-once
+    ``init`` / ``admit`` / ``step`` / ``evict`` with ``SlotBatch`` pinned by
+    ``slot_specs`` and the loop-carried state **donated** (``donate_argnums``)
+    so HBM never holds two copies of the KV buffers between steps.
+    Admission is a global scatter under a sharding constraint: the padded
+    single-row prefill is replicated, then written into the batch-sharded
+    slot buffers as a masked local write on the owning data shard.
+
+Placement modes:
+
+  * ``mesh=None`` (default): trace-transparent local mode — identical to
+    the historical eager paths, safe under an outer ``jax.jit``.
+  * ``mesh=None, jit=True``: compile-once entry points without placement
+    (the static-batch benchmark baseline).
+  * ``mesh=Mesh(..., ("data", "model"))``: fully sharded — Megatron-style
+    tensor parallelism over ``model``, batch/slot parallelism over
+    ``data`` (+ ``pod``).
+
+All three decode entry points in ``core.decode`` and the
+``ContinuousBatchingEngine`` run through this one session layer, so the
+static-batch paper baselines and continuous batching share a single
+driver.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import DecodeConfig, ModelConfig
+from repro.core import decode as decode_lib
+from repro.models import model as model_lib
+from repro.serving.types import EngineConfig, SlotBatch
+from repro.sharding import policy
+
+I32 = jnp.int32
+
+
+def _structs(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _geometry(batch: Dict) -> tuple:
+    return tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                        for k, v in batch.items()))
+
+
+class ServingFns(NamedTuple):
+    """The engine's device functions, compiled once per EngineConfig."""
+
+    init: Callable      # () -> SlotBatch (mesh-placed when sharded)
+    admit: Callable     # (params, state, slot, prompt, plen, max_new) -> state
+    step: Callable      # (params, state) -> state
+    evict: Callable     # (state, mask) -> state
+
+
+class DecodeSession:
+    """Sharding-aware owner of params + jitted decode entry points."""
+
+    def __init__(self, params, cfg: ModelConfig, dec: DecodeConfig, *,
+                 mesh=None, kv_chunk: int = 0, backend=None,
+                 jit: Optional[bool] = None, donate: Optional[bool] = None):
+        self.cfg = cfg
+        self.dec = dec
+        self.mesh = mesh
+        self.kv_chunk = kv_chunk
+        self.backend = backend
+        self.jit = (mesh is not None) if jit is None else bool(jit)
+        self._donate = donate
+        if mesh is not None:
+            self.param_shardings = policy.param_shardings(params, mesh)
+            self.params = jax.device_put(params, self.param_shardings)
+        else:
+            self.param_shardings = None
+            self.params = params
+        self._fns: Dict[Any, Callable] = {}
+
+    # -- placement helpers ---------------------------------------------------
+
+    @property
+    def donate(self) -> bool:
+        """Donate loop-carried state buffers.  Defaults on for accelerator
+        devices — XLA:CPU cannot alias donated buffers (it would only warn
+        and copy), so host-mesh debug runs stay quiet.  Keyed off the
+        session mesh's devices (the buffers live there), not the process
+        default backend."""
+        if self._donate is None:
+            platform = (self.mesh.devices.flat[0].platform
+                        if self.mesh is not None else jax.default_backend())
+            self._donate = platform in ("gpu", "tpu")
+        return self._donate
+
+    def _with_mesh(self, fn):
+        """Run (and, on first call, trace) ``fn`` under the session mesh so
+        the model's internal GSPMD hints (``policy.maybe_shard``) activate."""
+        if self.mesh is None:
+            return fn
+        mesh = self.mesh
+
+        def call(*args):
+            with mesh:
+                return fn(*args)
+
+        call._cache_size = getattr(fn, "_cache_size", None)
+        return call
+
+    def _constrain(self) -> Optional[Callable]:
+        """State-constraint hook handed to the loop impls: pins the
+        loop-carried NamedTuple state to its ``state_specs`` shardings."""
+        if self.mesh is None:
+            return None
+        cfg, mesh = self.cfg, self.mesh
+
+        def constrain(state):
+            specs = policy.state_specs(cfg, state, mesh)
+            return jax.lax.with_sharding_constraint(
+                state, policy.named(mesh, specs))
+
+        return constrain
+
+    def _out_shardings(self, fn, batch_size: int, *arg_structs):
+        """Explicit output shardings: batch-leading arrays over the data
+        axes, scalars/aggregates replicated."""
+        mesh = self.mesh
+        ax = policy.batch_axes(mesh, batch_size)
+
+        def rule(s):
+            if s.ndim >= 1 and s.shape[0] == batch_size:
+                return NamedSharding(mesh, P(*([ax] + [None] * (s.ndim - 1))))
+            return NamedSharding(mesh, P())
+
+        return jax.tree_util.tree_map(rule, jax.eval_shape(fn, *arg_structs))
+
+    def _get(self, key, build):
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = build()
+            self._fns[key] = fn
+        return fn
+
+    def _jit_entry(self, fn, batch: Dict, extra_in=(), extra_structs=()):
+        """jit one run-to-completion entry point with explicit shardings."""
+        if self.mesh is None:
+            return jax.jit(fn)
+        mesh = self.mesh
+        b = next(iter(batch.values())).shape[0]
+        in_sh = (self.param_shardings,
+                 policy.named(mesh, policy.batch_specs(mesh, batch)),
+                 *extra_in)
+        out_sh = self._out_shardings(fn, b, _structs(self.params),
+                                     _structs(batch), *extra_structs)
+        return self._with_mesh(
+            jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh))
+
+    # -- run-to-completion entry points -------------------------------------
+
+    def decode(self, batch: Dict, *, max_new_rows=None):
+        """Blockwise parallel decode (causal LM).  See core.decode.bpd_decode."""
+        cfg, dec = self.cfg, self.dec
+        if not self.jit:
+            return decode_lib._bpd_decode_impl(
+                self.params, cfg, dec, batch, max_new_rows,
+                backend=self.backend, kv_chunk=self.kv_chunk)
+
+        b = batch["tokens"].shape[0]
+        budget = (jnp.full((b,), dec.max_new_tokens, I32)
+                  if max_new_rows is None else jnp.asarray(max_new_rows, I32))
+
+        def build():
+            backend, kv_chunk = self.backend, self.kv_chunk
+            constrain = self._constrain()
+
+            def fn(params, batch, budget):
+                return decode_lib._bpd_decode_impl(
+                    params, cfg, dec, batch, budget, backend=backend,
+                    kv_chunk=kv_chunk, constrain=constrain)
+
+            extra_in, extra_structs = (), (jax.ShapeDtypeStruct((b,), I32),)
+            if self.mesh is not None:
+                ax = policy.batch_axes(self.mesh, b)
+                extra_in = (NamedSharding(self.mesh, P(ax)),)
+            return self._jit_entry(fn, batch, extra_in, extra_structs)
+
+        fn = self._get(("bpd",) + _geometry(batch), build)
+        return fn(self.params, batch, budget)
+
+    def greedy(self, batch: Dict):
+        """Greedy baseline (p_1 only).  See core.decode.greedy_decode."""
+        cfg, dec = self.cfg, self.dec
+        if not self.jit:
+            return decode_lib._greedy_decode_impl(
+                self.params, cfg, dec, batch, kv_chunk=self.kv_chunk)
+
+        def build():
+            kv_chunk = self.kv_chunk
+            constrain = self._constrain()
+
+            def fn(params, batch):
+                return decode_lib._greedy_decode_impl(
+                    params, cfg, dec, batch, kv_chunk=kv_chunk,
+                    constrain=constrain)
+
+            return self._jit_entry(fn, batch)
+
+        fn = self._get(("greedy",) + _geometry(batch), build)
+        return fn(self.params, batch)
+
+    def decode_seq2seq(self, batch: Dict):
+        """Encode once, BPD the decoder.  See core.decode.bpd_decode_seq2seq."""
+        cfg, dec = self.cfg, self.dec
+        if not self.jit:
+            return decode_lib._bpd_decode_seq2seq_impl(
+                self.params, cfg, dec, batch)
+
+        def build():
+            constrain = self._constrain()
+
+            def fn(params, batch):
+                return decode_lib._bpd_decode_seq2seq_impl(
+                    params, cfg, dec, batch, constrain=constrain)
+
+            return self._jit_entry(fn, batch)
+
+        fn = self._get(("s2s",) + _geometry(batch), build)
+        return fn(self.params, batch)
+
+    # -- serving (continuous batching) ---------------------------------------
+
+    def serving_fns(self, ecfg: EngineConfig) -> ServingFns:
+        """Compile-once device functions for the continuous-batching engine.
+
+        All four are geometry-fixed by ``ecfg``: prompts are padded to
+        ``max_prompt_len`` and slot indices are traced int32 scalars, so
+        admit/step/evict each compile exactly once regardless of traffic —
+        on a single device and on a ``("data", "model")`` mesh alike.
+        """
+        cfg, dec, mesh = self.cfg, self.dec, self.mesh
+        block_k = dec.block_k or cfg.bpd_k
+        prefix = cfg.num_meta_tokens
+        context_len = prefix + ecfg.max_prompt_len + ecfg.max_new_cap
+        buf_len = ecfg.max_prompt_len + ecfg.max_new_cap + block_k
+        backend = self.backend or decode_lib.causal_lm_backend(
+            cfg, kv_chunk=self.kv_chunk)
+        s = ecfg.num_slots
+
+        def init_slots() -> SlotBatch:
+            zeros = lambda: jnp.zeros((s,), I32)  # noqa: E731
+            return SlotBatch(
+                tokens=jnp.zeros((s, buf_len), I32),
+                text_len=zeros(),
+                prompt_len=zeros(),
+                proposals=jnp.zeros((s, block_k), I32),
+                caches=model_lib.init_caches(cfg, s, context_len, block_k),
+                active=jnp.zeros((s,), bool),
+                finished=jnp.ones((s,), bool),  # empty slots read as finished
+                generated=zeros(),
+                max_new=zeros(),
+                invocations=zeros(),
+            )
+
+        slot_sh = cache_sh = None
+        if mesh is not None:
+            struct = jax.eval_shape(init_slots)
+            slot_sh = policy.named(mesh, policy.slot_specs(cfg, struct, mesh))
+            cache_sh = slot_sh.caches
+
+        def admit(params, state: SlotBatch, slot, prompt, prompt_len,
+                  max_new) -> SlotBatch:
+            """Prefill one padded prompt into row ``slot``.
+
+            The single-row prefill is replicated work (batch 1 never splits
+            the data axis); the writes into the slot batch are a global
+            scatter constrained back to the slot shardings, so only the
+            data shard owning ``slot`` mutates its rows.
+            """
+            row_caches = model_lib.init_caches(cfg, 1, context_len, block_k)
+            h = model_lib.embed_inputs(params, cfg, {"tokens": prompt[None]})
+            positions = jnp.arange(h.shape[1], dtype=I32)
+            hidden, _, row_caches = model_lib.forward_hidden(
+                params, cfg, h, positions=positions, caches=row_caches,
+                moe_full_capacity=True)
+            last = jax.lax.dynamic_index_in_dim(
+                hidden[0], prefix + prompt_len - 1, axis=0, keepdims=False)
+            logits = model_lib.all_head_logits(params, cfg, last)  # (K, V)
+            proposals = jnp.argmax(logits[:block_k], axis=-1).astype(I32)
+
+            row_tokens = jnp.zeros((buf_len,), I32)
+            row_tokens = row_tokens.at[:ecfg.max_prompt_len].set(prompt)
+            upd = lambda arr, val: arr.at[slot].set(val)  # noqa: E731
+            return state._replace(
+                tokens=upd(state.tokens, row_tokens),
+                text_len=upd(state.text_len, prompt_len),
+                prompt_len=upd(state.prompt_len, prompt_len),
+                proposals=upd(state.proposals, proposals),
+                caches=model_lib.scatter_cache_row(state.caches, row_caches,
+                                                   slot, constraint=cache_sh),
+                active=upd(state.active, True),
+                finished=upd(state.finished, False),
+                generated=upd(state.generated, 0),
+                max_new=upd(state.max_new, max_new),
+                invocations=upd(state.invocations, 1),  # the prefill call
+            )
+
+        def step(params, state: SlotBatch) -> SlotBatch:
+            bst = decode_lib.BPDState(
+                tokens=state.tokens, text_len=state.text_len,
+                proposals=state.proposals, caches=state.caches,
+                finished=state.finished, iters=jnp.zeros((), I32),
+                generated=state.generated)
+            out = decode_lib.bpd_iteration(
+                params, cfg, dec, backend, bst, prefix_offset=prefix,
+                max_new=state.max_new, active=state.active)
+            stepped = state.active & ~state.finished
+            return state._replace(
+                tokens=out.tokens, text_len=out.text_len,
+                proposals=out.proposals, caches=out.caches,
+                finished=out.finished, generated=out.generated,
+                invocations=state.invocations + stepped.astype(I32))
+
+        def evict(state: SlotBatch, mask) -> SlotBatch:
+            return state._replace(
+                active=state.active & ~mask,
+                caches=model_lib.reset_cache_rows(state.caches, mask))
+
+        if mesh is None:
+            return ServingFns(init=jax.jit(init_slots),
+                              admit=jax.jit(admit),
+                              step=jax.jit(step),
+                              evict=jax.jit(evict))
+
+        rep = NamedSharding(mesh, P())
+        mask_sh = NamedSharding(mesh, P(policy.batch_axes(mesh, s)))
+        state_dn = (1,) if self.donate else ()
+        return ServingFns(
+            init=self._with_mesh(jax.jit(init_slots, out_shardings=slot_sh)),
+            admit=self._with_mesh(jax.jit(
+                admit,
+                in_shardings=(self.param_shardings, slot_sh, rep, rep, rep,
+                              rep),
+                out_shardings=slot_sh, donate_argnums=state_dn)),
+            step=self._with_mesh(jax.jit(
+                step, in_shardings=(self.param_shardings, slot_sh),
+                out_shardings=slot_sh, donate_argnums=state_dn)),
+            evict=self._with_mesh(jax.jit(
+                evict, in_shardings=(slot_sh, mask_sh),
+                out_shardings=slot_sh,
+                donate_argnums=(0,) if self.donate else ())),
+        )

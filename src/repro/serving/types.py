@@ -1,5 +1,5 @@
 """Request/response and configuration types for the continuous-batching
-BPD serving engine.
+BPD serving engine, plus the device-side ``SlotBatch`` state.
 
 A ``Request`` is one decode job (prompt + generation budget).  The engine
 holds ``EngineConfig.num_slots`` requests in flight at once; finished slots
@@ -9,9 +9,32 @@ are evicted and refilled from the scheduler queue without recompiling
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import TYPE_CHECKING, Any, NamedTuple, Optional
 
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - annotations only
+    import jax.numpy as jnp
+
+
+class SlotBatch(NamedTuple):
+    """Device-side state: ``BPDState`` generalized to reusable slots.
+
+    The slot dimension IS the decode batch dimension — under a mesh it
+    shards over the data axes (``sharding.policy.slot_specs``) exactly like
+    a static decode batch, and admission/eviction stay slot-local scatters.
+    """
+
+    tokens: "jnp.ndarray"      # (S, buf) per-slot prompt+output buffer
+    text_len: "jnp.ndarray"    # (S,) valid tokens in the buffer
+    prompt_len: "jnp.ndarray"  # (S,) prompt portion of text_len
+    proposals: "jnp.ndarray"   # (S, k) next-block proposals
+    caches: Any                # per-layer cache pytree (batch dim = S)
+    active: "jnp.ndarray"      # (S,) bool — slot holds a live request
+    finished: "jnp.ndarray"    # (S,) bool — request hit EOS / budget
+    generated: "jnp.ndarray"   # (S,) accepted tokens so far
+    max_new: "jnp.ndarray"     # (S,) per-slot generation budget
+    invocations: "jnp.ndarray" # (S,) model calls spent on this request
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,6 +44,49 @@ class EngineConfig:
     num_slots: int = 4          # concurrent requests in the device batch
     max_prompt_len: int = 32    # prompts are padded to this for admission
     max_new_cap: int = 64       # hard per-request generation budget
+
+    def validate(self, dec=None, mesh=None) -> None:
+        """Fail construction-time with a clear message instead of a
+        downstream shape/trace error.
+
+        dec  : optional DecodeConfig — ``max_new_cap`` must fit inside its
+               ``max_new_tokens`` loop bound.
+        mesh : optional jax Mesh — the slot batch shards over the data
+               axes, so ``num_slots`` must split evenly across them.
+        """
+        if self.num_slots <= 0:
+            raise ValueError(
+                f"EngineConfig.num_slots must be positive, got "
+                f"{self.num_slots}")
+        if self.max_prompt_len <= 0:
+            raise ValueError(
+                f"EngineConfig.max_prompt_len must be positive, got "
+                f"{self.max_prompt_len}")
+        if self.max_new_cap <= 0:
+            raise ValueError(
+                f"EngineConfig.max_new_cap must be positive, got "
+                f"{self.max_new_cap}")
+        if dec is not None and self.max_new_cap > dec.max_new_tokens:
+            raise ValueError(
+                f"EngineConfig.max_new_cap={self.max_new_cap} exceeds "
+                f"DecodeConfig.max_new_tokens={dec.max_new_tokens}: the "
+                f"decode loop bound would truncate requests below their "
+                f"advertised budget")
+        if mesh is not None:
+            from repro.sharding.policy import batch_axes, data_axis_size
+
+            # batch_axes is the single source of truth for how the slot
+            # batch shards (it already falls back from pod×data to data
+            # alone) — reject only configurations it cannot shard at all,
+            # which would silently replicate the whole slot batch.
+            dsz = data_axis_size(mesh)
+            if dsz > 1 and batch_axes(mesh, self.num_slots) is None:
+                raise ValueError(
+                    f"EngineConfig.num_slots={self.num_slots} is not "
+                    f"divisible by the mesh data axes (data-axis product "
+                    f"{dsz}, mesh axes {dict(mesh.shape)}): the slot "
+                    f"batch cannot shard and would be replicated — pick "
+                    f"num_slots as a multiple of the data axis size")
 
 
 @dataclasses.dataclass

@@ -2,18 +2,24 @@ from repro.sharding.policy import (
     batch_axes,
     batch_specs,
     cache_specs,
+    data_axis_size,
     data_spec,
     named,
     param_shardings,
     param_specs,
+    slot_specs,
+    state_specs,
 )
 
 __all__ = [
     "batch_axes",
     "batch_specs",
     "cache_specs",
+    "data_axis_size",
     "data_spec",
     "named",
     "param_shardings",
     "param_specs",
+    "slot_specs",
+    "state_specs",
 ]

@@ -14,6 +14,7 @@ sensible defaults; rules are ordered, first match wins.
 from __future__ import annotations
 
 import math
+import re
 from typing import Any, Optional, Tuple
 
 import jax
@@ -84,8 +85,6 @@ DEFAULT_SPEC = P()  # norms, biases, scalars
 
 
 def _spec_for(name: str) -> P:
-    import re
-
     for pattern, spec in PARAM_RULES:
         if re.search(pattern, name):
             return spec
@@ -185,6 +184,55 @@ def cache_specs(cfg: ModelConfig, caches: Pytree, mesh: Mesh,
         return P(*([ax] + [None] * (x.ndim - 1)))
 
     return tree_map_with_name(spec, caches)
+
+
+# ---------------------------------------------------------------------------
+# Loop-carried decode state specs (BPDState / GreedyState / SlotBatch)
+# ---------------------------------------------------------------------------
+
+
+def state_specs(cfg: ModelConfig, state: Any, mesh: Mesh, *,
+                batch_size: Optional[int] = None) -> Any:
+    """PartitionSpec pytree for a batch-leading decode loop state.
+
+    ``state`` is any NamedTuple whose arrays lead with the batch dimension
+    (``BPDState``, ``GreedyState``, the serving ``SlotBatch``) and whose
+    ``caches`` field is a per-layer cache pytree: the caches get the full
+    ``cache_specs`` treatment (kv-heads or buffer length over ``model``),
+    every other (B, ...) array shards its leading dim over the data axes,
+    and scalars (loop counters) are replicated.  Works on concrete arrays
+    and on ``ShapeDtypeStruct`` trees alike.
+    """
+    b = batch_size if batch_size is not None else state.tokens.shape[0]
+    ax = batch_axes(mesh, b)
+
+    def leaf(x) -> P:
+        if x.ndim >= 1 and x.shape[0] == b:
+            return P(*([ax] + [None] * (x.ndim - 1)))
+        return P()
+
+    fields = {}
+    for name, val in state._asdict().items():
+        if name == "caches" and val is not None:
+            fields[name] = cache_specs(cfg, val, mesh, b)
+        else:
+            fields[name] = jax.tree_util.tree_map(leaf, val)
+    return type(state)(**fields)
+
+
+def slot_specs(cfg: ModelConfig, slots: Any, mesh: Mesh) -> Any:
+    """Specs for the serving engine's ``SlotBatch`` (slot dim == batch dim).
+
+    Identical derivation to ``state_specs`` — the slot batch IS the decode
+    batch; admission/eviction scatters stay local to the owning data shard.
+    """
+    return state_specs(cfg, slots, mesh, batch_size=slots.tokens.shape[0])
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    """Number of shards the batch/slot dim splits into on this mesh."""
+    return math.prod(mesh.shape[a] for a in ("pod", "data")
+                     if a in mesh.axis_names)
 
 
 def _active_mesh():

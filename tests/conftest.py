@@ -15,6 +15,10 @@ def pytest_configure(config):
         "per push; the full suite runs nightly)")
     config.addinivalue_line(
         "markers", "serving: continuous-batching serving engine tests")
+    config.addinivalue_line(
+        "markers", "sharded: host-mesh sharded decode tests (need "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8; skip on "
+        "1-device hosts)")
 
 
 def tiny_dense(**kw) -> ModelConfig:
