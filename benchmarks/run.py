@@ -7,11 +7,16 @@ under experiments/.
   table4  — iteration vs wall-clock speedup (paper Table 4 / Fig. 4)
   kernels — Pallas kernel microbenches vs their jnp oracles (CPU interpret)
   roofline— aggregated dry-run roofline terms (EXPERIMENTS.md §Roofline)
+  policies— per-DecodePolicy mean-k̂ / acceptance-rate / iters-per-token
+            sweep on a trained copy-task seq2seq (benchmarks/policy_sweep)
 
 ``--quick`` runs reduced step counts (CI-sized); default is the full
 CPU-scale reproduction (~30-45 min).  ``--smoke`` runs only the
-seconds-scale subset (kernels + roofline) — the CI benchmark-smoke job
-pairs it with ``benchmarks/serve_throughput.py --smoke``.
+seconds-scale subset (kernels + roofline + policies) — the CI
+benchmark-smoke job pairs it with ``benchmarks/serve_throughput.py
+--smoke`` and FAILS if the ``exact`` policy's mean-k̂ regresses against
+the committed ``BENCH_decode.json`` baseline, or if no new drafter beats
+HeadsDrafter+exact.
 """
 from __future__ import annotations
 
@@ -73,15 +78,17 @@ def main():
                     help="re-run the table experiments even when a cached "
                          "experiments/tableN.json exists")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table2,table4,kernels,roofline")
+                    help="comma list: table1,table2,table4,kernels,roofline,"
+                         "policies")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
-        "table1", "table2", "table4", "kernels", "roofline"}
+        "table1", "table2", "table4", "kernels", "roofline", "policies"}
     if args.smoke:
-        which &= {"kernels", "roofline"}
+        which &= {"kernels", "roofline", "policies"}
         if not which:
-            raise SystemExit(f"--smoke only covers kernels/roofline; "
-                             f"--only {args.only} selects none of them")
+            raise SystemExit(f"--smoke only covers kernels/roofline/"
+                             f"policies; --only {args.only} selects none "
+                             f"of them")
 
     rows = {}
 
@@ -130,19 +137,59 @@ def main():
     if "kernels" in which:
         bench_kernels(emit)
 
+    if "policies" in which:
+        sweep = _bench_module("policy_sweep")
+        for name, r in sweep.run().items():
+            for key, val in r.items():
+                emit(f"policies/{name}/{key}", round(val, 4))
+
     if "roofline" in which:
         roofline = _bench_module("roofline")
         sys.argv = ["roofline"]
         roofline.main()
 
+    # ---- policy regression gates (CI bench-smoke job) ----------------------
+    # read the committed baseline BEFORE overwriting it below: a regression
+    # must fail the job while leaving the baseline artifact intact
+    bench_path = os.path.join(_ROOT, "BENCH_decode.json")
+    if args.smoke and "policies" in which:
+        baseline = None
+        if os.path.exists(bench_path):
+            with open(bench_path) as f:
+                baseline = json.load(f).get("rows", {}).get(
+                    "policies/exact/mean_khat")
+        new_exact = float(rows["policies/exact/mean_khat"])
+        # NB: each passing smoke rewrites the baseline below, so the gate
+        # bounds the PER-PR drop at 5% rather than enforcing an all-time
+        # floor — deliberate, because the sweep workload/config may change
+        # legitimately; reviewers see every baseline move in the
+        # BENCH_decode.json diff.
+        if baseline is not None and new_exact < 0.95 * float(baseline):
+            raise SystemExit(
+                f"POLICY REGRESSION: ExactAcceptor mean-k̂ {new_exact:.3f} "
+                f"fell below the committed baseline {float(baseline):.3f} "
+                f"(tolerance 5%) — the heads-drafted exact policy got "
+                f"slower; see BENCH_decode.json")
+        best_new = max(float(rows[f"policies/{p}/mean_khat"])
+                       for p in ("input_copy", "topk_tree"))
+        if best_new <= new_exact:
+            raise SystemExit(
+                f"DRAFTER REGRESSION: no new drafter beats "
+                f"HeadsDrafter+exact (best {best_new:.3f} vs exact "
+                f"{new_exact:.3f}) — input_copy/topk_tree lost their edge")
+
     # repo-root perf-trajectory artifact (committed, so the smoke numbers
     # are diffable PR over PR; serve_throughput.py writes BENCH_serve.json).
-    # Only the smoke configuration writes it — full/--only runs must never
-    # clobber the committed baseline with non-comparable rows.
-    if args.smoke:
-        with open(os.path.join(_ROOT, "BENCH_decode.json"), "w") as f:
+    # Only the FULL smoke configuration writes it — a partial `--smoke
+    # --only kernels` run would drop the policies rows and silently disarm
+    # the regression gate for every later run against the committed file.
+    if args.smoke and which == {"kernels", "roofline", "policies"}:
+        with open(bench_path, "w") as f:
             json.dump({"smoke": True, "which": sorted(which), "rows": rows},
                       f, indent=2, default=str)
+    elif args.smoke:
+        print(f"[bench] partial smoke ({sorted(which)}): NOT rewriting "
+              f"{bench_path}")
 
 
 if __name__ == "__main__":

@@ -87,7 +87,7 @@ def trace_decode(params, cfg, dec, src_row):
     while not bool(state.finished[0]) and step < dec.max_new_tokens:
         prev_len = int(state.text_len[0])
         state = D.bpd_iteration(params, cfg, dec, be, state, prefix_offset=0,
-                                prompt_len=1, max_new=dec.max_new_tokens)
+                                max_new=dec.max_new_tokens)
         khat = int(state.text_len[0]) - prev_len
         toks = np.asarray(state.tokens[0, prev_len:prev_len + khat])
         step += 1

@@ -6,7 +6,13 @@ from repro.config.base import (
     ModelConfig,
     TrainConfig,
 )
-from repro.config.registry import get_config, list_archs, register
+from repro.config.registry import (
+    get_config,
+    get_policy,
+    list_archs,
+    list_policies,
+    register,
+)
 
 __all__ = [
     "DTYPES",
@@ -16,6 +22,8 @@ __all__ = [
     "ModelConfig",
     "TrainConfig",
     "get_config",
+    "get_policy",
     "list_archs",
+    "list_policies",
     "register",
 ]

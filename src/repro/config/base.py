@@ -146,11 +146,19 @@ class ModelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class DecodeConfig:
-    """Paper §3-§5 decode-time parameters."""
+    """Paper §3-§5 decode-time parameters.
+
+    ``policy`` names a registered ``core.policy.DecodePolicy`` (drafter ×
+    acceptor × block schedule); empty string falls back to the legacy
+    ``criterion`` alias, so existing configs decode unchanged.  The policy
+    builders read their knobs (``top_k``, ``epsilon``, ``min_block``) off
+    this config.
+    """
 
     max_new_tokens: int = 64
     block_k: int = 0               # 0 -> model's bpd_k
     criterion: str = "exact"       # exact | topk | distance  (§3, §5.1, §5.2)
+    policy: str = ""               # registered DecodePolicy name ("" -> criterion)
     top_k: int = 1                 # §5.1 top-k selection threshold
     epsilon: float = 0.0           # §5.2 distance-based tolerance
     min_block: int = 1             # §5.3 minimum accepted block size

@@ -34,3 +34,28 @@ def list_archs() -> list[str]:
     import repro.configs  # noqa: F401
 
     return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Decode policies: ``--policy <name>`` resolution (CLI / config back-compat).
+# The canonical registry lives in ``repro.core.policy`` (imported lazily —
+# config must stay importable without the decode stack); these wrappers give
+# launchers one place to resolve both architectures and policies.
+# ---------------------------------------------------------------------------
+
+
+def get_policy(dec, policy=None):
+    """Resolve a ``DecodePolicy`` for ``dec`` (a DecodeConfig).
+
+    ``policy`` may be a registered name, a ``DecodePolicy`` object, or None
+    (fall back to ``dec.policy``, then the legacy ``dec.criterion`` alias).
+    """
+    from repro.core.policy import resolve_policy
+
+    return resolve_policy(dec, policy)
+
+
+def list_policies() -> list[str]:
+    from repro.core.policy import list_policies as _lp
+
+    return _lp()

@@ -10,6 +10,25 @@ from repro.core.heads import (
     heads_apply,
     heads_init,
 )
+from repro.core.policy import (
+    AdaptiveSchedule,
+    Acceptor,
+    BlockSchedule,
+    DecodePolicy,
+    DistanceAcceptor,
+    Drafter,
+    DraftInputs,
+    ExactAcceptor,
+    HeadsDrafter,
+    InputCopyDrafter,
+    PolicyState,
+    StaticSchedule,
+    TopKAcceptor,
+    TopKTreeDrafter,
+    list_policies,
+    register_policy,
+    resolve_policy,
+)
 from repro.core.verify import accepted_block_size, position_accepts
 from repro.core.decode import (
     Backend,
@@ -30,9 +49,26 @@ from repro.core.train import (
 )
 
 __all__ = [
+    "Acceptor",
+    "AdaptiveSchedule",
     "Backend",
     "BPDState",
+    "BlockSchedule",
+    "DecodePolicy",
+    "DistanceAcceptor",
+    "Drafter",
+    "DraftInputs",
+    "ExactAcceptor",
+    "HeadsDrafter",
+    "InputCopyDrafter",
+    "PolicyState",
+    "StaticSchedule",
+    "TopKAcceptor",
+    "TopKTreeDrafter",
     "accepted_block_size",
+    "list_policies",
+    "register_policy",
+    "resolve_policy",
     "bpd_decode",
     "bpd_iteration",
     "bpd_prefill_causal_lm",

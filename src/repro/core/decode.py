@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import DecodeConfig, ModelConfig
-from repro.core.verify import accepted_block_size, position_accepts
+from repro.core import policy as policy_lib
+from repro.core.policy import DecodePolicy, DraftInputs, PolicyState
 from repro.models import model as model_lib
 from repro.models import seq2seq as seq2seq_lib
 from repro.models.layers import embed_apply
@@ -76,12 +77,23 @@ class BPDState(NamedTuple):
     finished: jnp.ndarray      # (B,) bool
     iters: jnp.ndarray         # () int32 — model invocations in the loop
     generated: jnp.ndarray     # (B,) int32 — accepted tokens so far
+    policy_state: PolicyState = PolicyState()  # loop-carried drafter/schedule
+
+
+def _freeze_rows(frozen, old_tree, new_tree):
+    """Keep the old policy-state rows where ``frozen`` is True.  Policy
+    state leaves are batch-leading (B, ...) arrays by contract."""
+    def leaf(old, new):
+        mask = frozen.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(mask, old, new)
+
+    return jax.tree_util.tree_map(leaf, old_tree, new_tree)
 
 
 def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
                   backend: Backend, state: BPDState, *,
-                  prefix_offset: int, max_new, prompt_len=None,
-                  active=None) -> BPDState:
+                  prefix_offset: int, max_new, active=None,
+                  policy: Optional[DecodePolicy] = None) -> BPDState:
     """One combined predict/verify/accept step.
 
     max_new : int or (B,) int32 — per-row generation budget (the serving
@@ -90,8 +102,10 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
               holding no request (continuous batching): they accept nothing,
               write nothing, and keep their state frozen exactly like
               finished rows.
+    policy  : decode policy (drafter × acceptor × block schedule); None
+              resolves ``dec.policy`` / the legacy ``dec.criterion`` alias.
     """
-    del prompt_len  # kept for call-site compatibility; unused
+    pol = policy_lib.resolve_policy(dec, policy)
     block_k = dec.block_k or cfg.bpd_k
     b = state.proposals.shape[0]
     pos_len = state.text_len + prefix_offset
@@ -104,9 +118,10 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
     p1_logits = logits[:, :, 0, :]
 
     # ---- verify ------------------------------------------------------------
-    accepts = position_accepts(state.proposals, p1_logits, dec)
+    accepts = pol.acceptor.accepts(state.proposals, p1_logits)
     remaining = jnp.maximum(max_new - state.generated, 1)
-    khat = accepted_block_size(accepts, dec, remaining)     # (B,) in [1, k]
+    khat, sched_state = pol.schedule.block_size(
+        accepts, remaining, state.policy_state.schedule)    # (B,) in [1, k]
     frozen = state.finished if active is None else (state.finished | ~active)
     khat = jnp.where(frozen, 0, khat)
 
@@ -133,11 +148,17 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
     generated = state.generated + khat
     finished = state.finished | has_eos | (generated >= max_new)
 
-    # ---- next-block proposals (already computed by this invocation) --------
-    head_argmax = jnp.argmax(logits, axis=-1)               # (B, k, K)
-    slot = jnp.maximum(khat - 1, 0)[:, None, None]
-    proposals = jnp.take_along_axis(head_argmax, slot, axis=1)[:, 0, :]
+    # ---- next-block proposals (drafted from this same invocation) ----------
+    draft_in = DraftInputs(
+        logits=logits, khat=khat, slot=jnp.maximum(khat - 1, 0),
+        text_len=state.text_len + khat, old_proposals=state.proposals)
+    proposals, draft_state = pol.drafter.draft(
+        draft_in, state.policy_state.drafter)
     proposals = jnp.where(frozen[:, None], state.proposals, proposals)
+    policy_state = PolicyState(
+        drafter=_freeze_rows(frozen, state.policy_state.drafter, draft_state),
+        schedule=_freeze_rows(frozen, state.policy_state.schedule,
+                              sched_state))
 
     return BPDState(
         tokens=tokens,
@@ -147,7 +168,31 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
         finished=finished,
         iters=state.iters + 1,
         generated=generated,
+        policy_state=policy_state,
     )
+
+
+def initial_draft(pol: DecodePolicy, head_logits: jnp.ndarray,
+                  text_len: jnp.ndarray, block_k: int, state):
+    """Draft the FIRST block from a prefill's head logits.
+
+    ``head_logits`` is (B, K, V) at the last context position — presented to
+    the drafter as a single pseudo block slot (slot 0, k̂ = 1), so the same
+    ``draft`` method covers prefill and loop iterations.  For
+    ``HeadsDrafter`` this reduces exactly to the historical
+    ``argmax(head_logits)``; source-drafting policies get to draft from
+    their own state immediately instead of spending one iteration on weak
+    head proposals.
+    """
+    b = head_logits.shape[0]
+    din = DraftInputs(
+        logits=head_logits[:, None, :block_k, :],
+        khat=jnp.ones((b,), jnp.int32),
+        slot=jnp.zeros((b,), jnp.int32),
+        text_len=jnp.broadcast_to(jnp.asarray(text_len, jnp.int32), (b,)),
+        old_proposals=jnp.zeros((b, block_k), jnp.int32))
+    proposals, new_state = pol.drafter.draft(din, state)
+    return proposals.astype(jnp.int32), new_state
 
 
 # ---------------------------------------------------------------------------
@@ -175,8 +220,10 @@ def decode_stats(final) -> Dict:
 
 
 def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
-                          batch: Dict, *, max_new: int, kv_chunk: int = 0):
+                          batch: Dict, *, max_new: int, kv_chunk: int = 0,
+                          policy: Optional[DecodePolicy] = None):
     """Prefill the caches from the prompt and produce the first proposals."""
+    pol = policy_lib.resolve_policy(dec, policy)
     block_k = dec.block_k or cfg.bpd_k
     prompt = batch["tokens"]
     b, prompt_len = prompt.shape
@@ -191,7 +238,9 @@ def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
         moe_full_capacity=True)
     last = hidden[:, -1, :]                                 # context = full prompt
     logits = model_lib.all_head_logits(params, cfg, last)   # (B, K, V)
-    proposals = jnp.argmax(logits[:, :block_k, :], axis=-1)
+    ps = pol.init_state(cfg, dec, batch, b)
+    proposals, dstate = initial_draft(pol, logits, prompt_len, block_k,
+                                      ps.drafter)
 
     buf = prompt_len + max_new + block_k
     tokens = jnp.zeros((b, buf), jnp.int32)
@@ -204,6 +253,7 @@ def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
         finished=jnp.zeros((b,), bool),
         iters=jnp.zeros((), jnp.int32),
         generated=jnp.zeros((b,), jnp.int32),
+        policy_state=ps._replace(drafter=dstate),
     )
     return state, prefix
 
@@ -211,7 +261,8 @@ def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
 def _bpd_decode_impl(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict,
                      row_budget=None, *, backend: Optional[Backend] = None,
                      kv_chunk: int = 0,
-                     constrain: Optional[Callable] = None
+                     constrain: Optional[Callable] = None,
+                     policy: Optional[DecodePolicy] = None
                      ) -> Tuple[jnp.ndarray, Dict]:
     """Prefill + while_loop for the decoder-only model.
 
@@ -220,11 +271,12 @@ def _bpd_decode_impl(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict,
     through the whole loop.
     """
     max_new = dec.max_new_tokens
+    pol = policy_lib.resolve_policy(dec, policy)
     state, prefix = bpd_prefill_causal_lm(params, cfg, dec, batch,
-                                          max_new=max_new, kv_chunk=kv_chunk)
+                                          max_new=max_new, kv_chunk=kv_chunk,
+                                          policy=pol)
     if constrain is not None:
         state = constrain(state)
-    prompt_len = batch["tokens"].shape[1]
     be = backend or causal_lm_backend(cfg, kv_chunk=kv_chunk)
     budget = max_new if row_budget is None else row_budget
 
@@ -233,23 +285,22 @@ def _bpd_decode_impl(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict,
 
     def body(s: BPDState):
         return bpd_iteration(params, cfg, dec, be, s,
-                             prefix_offset=prefix, prompt_len=prompt_len,
-                             max_new=budget)
+                             prefix_offset=prefix, max_new=budget, policy=pol)
 
     final = jax.lax.while_loop(cond, body, state)
     return final.tokens, decode_stats(final)
 
 
 def _session_for(params, cfg, dec, *, mesh=None, session=None, kv_chunk=0,
-                 backend=None):
+                 backend=None, policy=None):
     """Resolve the DecodeSession a wrapper should run through.
 
     When ``session`` is given it takes precedence — its (possibly
     mesh-placed) params are used, so the ``params`` argument is ignored by
-    design; cfg/dec however must MATCH the session's, or the caller would
-    silently decode under a different geometry/criterion than requested.
-    Otherwise a lightweight local session is built — with mesh=None that
-    is trace-transparent and allocation-free.
+    design; cfg/dec/policy however must MATCH the session's, or the caller
+    would silently decode under a different geometry/criterion than
+    requested.  Otherwise a lightweight local session is built — with
+    mesh=None that is trace-transparent and allocation-free.
     """
     if session is not None:
         if session.cfg is not cfg and session.cfg != cfg:
@@ -263,17 +314,25 @@ def _session_for(params, cfg, dec, *, mesh=None, session=None, kv_chunk=0,
                 f"{dec}: a session's decode config is fixed at "
                 f"construction — build a new session (or call its "
                 f"methods directly)")
+        if policy is not None and \
+                policy_lib.resolve_policy(dec, policy) != session.policy:
+            raise ValueError(
+                f"session was built with policy "
+                f"{session.policy.name!r}, called with {policy!r}: a "
+                f"session's decode policy is fixed at construction — "
+                f"build a new session")
         return session
     from repro.serving.session import DecodeSession
 
     return DecodeSession(params, cfg, dec, mesh=mesh, kv_chunk=kv_chunk,
-                         backend=backend)
+                         backend=backend, policy=policy)
 
 
 def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
                backend: Optional[Backend] = None, kv_chunk: int = 0,
                max_new_rows: Optional[jnp.ndarray] = None,
-               mesh=None, session=None) -> Tuple[jnp.ndarray, Dict]:
+               mesh=None, session=None, policy=None
+               ) -> Tuple[jnp.ndarray, Dict]:
     """Full blockwise parallel decode for the decoder-only model.
 
     Returns (tokens (B, buf), stats).  stats["mean_accepted"] is the paper's
@@ -282,6 +341,9 @@ def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
     max_new_rows: optional (B,) int32 per-row budgets ≤ dec.max_new_tokens —
     rows stop at their own budget (static-batch serving baseline), while the
     buffers stay sized by dec.max_new_tokens.
+
+    policy: a registered policy name or ``DecodePolicy`` object overriding
+    ``dec.policy`` / the legacy ``dec.criterion`` alias for this decode.
 
     mesh / session: run through a sharding-aware ``DecodeSession`` — params
     placed with ``param_shardings``, the loop jitted with explicit in/out
@@ -292,7 +354,7 @@ def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
     placement and per-geometry jit cache persist across calls.
     """
     sess = _session_for(params, cfg, dec, mesh=mesh, session=session,
-                        kv_chunk=kv_chunk, backend=backend)
+                        kv_chunk=kv_chunk, backend=backend, policy=policy)
     return sess.decode(batch, max_new_rows=max_new_rows)
 
 
@@ -303,10 +365,12 @@ def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
 
 def _bpd_decode_seq2seq_impl(params, cfg: ModelConfig, dec: DecodeConfig,
                              batch: Dict,
-                             constrain: Optional[Callable] = None
+                             constrain: Optional[Callable] = None,
+                             policy: Optional[DecodePolicy] = None
                              ) -> Tuple[jnp.ndarray, Dict]:
     """batch: {"src": (B, Ss)}.  Decoder stream: BOS (token 0) + output."""
     max_new = dec.max_new_tokens
+    pol = policy_lib.resolve_policy(dec, policy)
     block_k = dec.block_k or cfg.bpd_k
     src = batch["src"]
     b = src.shape[0]
@@ -320,7 +384,8 @@ def _bpd_decode_seq2seq_impl(params, cfg: ModelConfig, dec: DecodeConfig,
                                                 enc_mask=enc_mask,
                                                 caches=caches)
     logits = seq2seq_lib.all_head_logits(params, cfg, hidden[:, -1, :])
-    proposals = jnp.argmax(logits[:, :block_k, :], axis=-1)
+    ps = pol.init_state(cfg, dec, batch, b)
+    proposals, dstate = initial_draft(pol, logits, 1, block_k, ps.drafter)
 
     buf = 1 + max_new + block_k
     tokens = jnp.zeros((b, buf), jnp.int32)
@@ -332,6 +397,7 @@ def _bpd_decode_seq2seq_impl(params, cfg: ModelConfig, dec: DecodeConfig,
         finished=jnp.zeros((b,), bool),
         iters=jnp.zeros((), jnp.int32),
         generated=jnp.zeros((b,), jnp.int32),
+        policy_state=ps._replace(drafter=dstate),
     )
     if constrain is not None:
         state = constrain(state)
@@ -341,17 +407,23 @@ def _bpd_decode_seq2seq_impl(params, cfg: ModelConfig, dec: DecodeConfig,
 
     def body(s: BPDState):
         return bpd_iteration(params, cfg, dec, be, s, prefix_offset=0,
-                             prompt_len=1, max_new=max_new)
+                             max_new=max_new, policy=pol)
 
     final = jax.lax.while_loop(cond, body, state)
     return final.tokens[:, 1:], decode_stats(final)  # strip BOS
 
 
 def bpd_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
-                       batch: Dict, *, mesh=None, session=None
+                       batch: Dict, *, mesh=None, session=None, policy=None
                        ) -> Tuple[jnp.ndarray, Dict]:
-    """batch: {"src": (B, Ss)}.  Decoder stream: BOS (token 0) + output."""
-    sess = _session_for(params, cfg, dec, mesh=mesh, session=session)
+    """batch: {"src": (B, Ss)}.  Decoder stream: BOS (token 0) + output.
+
+    ``policy`` — see ``bpd_decode``; the seq2seq path additionally supports
+    source-drafting policies (``input_copy``), whose drafter state is
+    initialized from ``batch["src"]``.
+    """
+    sess = _session_for(params, cfg, dec, mesh=mesh, session=session,
+                        policy=policy)
     return sess.decode_seq2seq(batch)
 
 

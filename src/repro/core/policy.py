@@ -1,0 +1,416 @@
+"""Pluggable decode policies: Drafter × Acceptor × BlockSchedule.
+
+The paper's speedups hinge on *what gets proposed* and *how it is accepted*
+(§3 exact match, §5.1 top-k, §5.2 distance, §5.3 minimum block size).  A
+``DecodePolicy`` makes those axes first-class objects instead of enum
+branches inside the decode loop:
+
+  * ``Acceptor``   — maps (proposals, verify p_1 logits) to per-position
+    accept decisions.  Built-ins: ``ExactAcceptor`` (§3), ``TopKAcceptor``
+    (§5.1), ``DistanceAcceptor`` (§5.2).
+  * ``BlockSchedule`` — turns the accept mask into a per-row block size k̂,
+    optionally with loop-carried state.  ``StaticSchedule`` is §5.3's
+    minimum block size; ``AdaptiveSchedule`` generalizes it into a dynamic
+    controller that grows/shrinks a per-row cap from the running acceptance
+    rate.
+  * ``Drafter``    — produces the next block of k proposals from the verify
+    forward's own outputs (plus optional loop-carried state).
+    ``HeadsDrafter`` is the paper's prediction heads; ``InputCopyDrafter``
+    drafts from the source sentence (Aggressive-Decoding-style, for the
+    paper's MT setting); ``TopKTreeDrafter`` drafts top-k candidates per
+    slot and picks the chain that the strongest head (p_1) also scores
+    highly.
+
+Index convention (0-based within a block; see core/verify.py):
+
+  * ``proposals[:, i]`` proposes the token at absolute position
+    ``text_len + i`` (the next unwritten position is ``text_len``).
+  * Slot 0 of a fresh draft MUST be the model's own verified greedy token
+    (p_1's argmax at the accepted slot): acceptance treats slot 0 as
+    unconditional (k̂ ≥ 1), so a drafter that puts anything else there
+    changes the decoded output.  Every built-in drafter preserves this, so
+    exact-acceptance decoding stays token-identical to greedy regardless of
+    the drafter — drafts change *iteration counts*, never *tokens*.
+
+Loop-carried policy state is a ``PolicyState(drafter=…, schedule=…)`` pytree
+threaded through ``BPDState`` / ``SlotBatch``.  Every state leaf must be a
+batch-leading ``(B, …)`` array (or absent): ``sharding.policy.state_specs``
+then shards it over the data axes like any other per-row decode state, and
+the serving engine can reset single rows on admit/evict.
+
+String names resolve through ``resolve_policy`` (see ``POLICY_BUILDERS``);
+the legacy ``DecodeConfig.criterion`` strings "exact" / "topk" / "distance"
+remain valid aliases for the corresponding heads-drafted policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DecodeConfig
+
+I32 = jnp.int32
+
+
+class PolicyState(NamedTuple):
+    """Loop-carried policy state (a field of ``BPDState`` / ``SlotBatch``).
+
+    Both fields are pytrees whose leaves are batch-leading ``(B, …)``
+    arrays; ``()`` means stateless.  Kept as a NamedTuple so the pytree
+    structure is stable across jit boundaries and ``state_specs`` can walk
+    it like any other decode-state field.
+    """
+
+    drafter: Any = ()
+    schedule: Any = ()
+
+
+class DraftInputs(NamedTuple):
+    """Everything one verify forward exposes to a ``Drafter``.
+
+    ``logits`` is the full head tensor of the iteration that just verified
+    the current block — reusing it keeps drafting free (no extra model
+    calls), exactly like the paper's combined scoring/proposal
+    formulation (§4).
+    """
+
+    logits: jnp.ndarray       # (B, k, K, V) all-head logits at every slot
+    khat: jnp.ndarray         # (B,) accepted block size this iteration
+    slot: jnp.ndarray         # (B,) accepted slot index = max(k̂ - 1, 0)
+    text_len: jnp.ndarray     # (B,) text length AFTER accepting this block
+    old_proposals: jnp.ndarray  # (B, k) the block that was just verified
+
+
+def _gather_slot(x: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, k, ...) gathered at per-row slot -> (B, ...)."""
+    idx = slot.reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Acceptors (paper §3, §5.1, §5.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Acceptor:
+    """Per-position acceptance rule.  Subclasses implement ``position_ok``
+    on the (B, k-1) candidate slice; slot 0 is always accepted (k̂ ≥ 1)."""
+
+    def accepts(self, proposals: jnp.ndarray,
+                p1_logits: jnp.ndarray) -> jnp.ndarray:
+        """proposals (B, k) int32, p1_logits (B, k, V) -> (B, k) bool."""
+        b, k = proposals.shape
+        ver_logits = p1_logits[:, : k - 1, :]      # slot i-1 verifies slot i
+        cand = proposals[:, 1:]
+        ok = self.position_ok(cand, ver_logits)
+        return jnp.concatenate([jnp.ones((b, 1), bool), ok], axis=1)
+
+    def position_ok(self, cand: jnp.ndarray,
+                    ver_logits: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactAcceptor(Acceptor):
+    """§3: accept while the proposal equals the model's greedy token —
+    output is token-identical to greedy decoding."""
+
+    def position_ok(self, cand, ver_logits):
+        return cand == jnp.argmax(ver_logits, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKAcceptor(Acceptor):
+    """§5.1: accept any proposal inside the verifier's top-k set."""
+
+    top_k: int = 1
+
+    def position_ok(self, cand, ver_logits):
+        _, top_ids = jax.lax.top_k(ver_logits, self.top_k)
+        return jnp.any(top_ids == cand[..., None], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistanceAcceptor(Acceptor):
+    """§5.2: ordinal vocabularies — accept proposals within ``epsilon`` of
+    the greedy token id."""
+
+    epsilon: float = 0.0
+
+    def position_ok(self, cand, ver_logits):
+        return jnp.abs(cand - jnp.argmax(ver_logits, axis=-1)) <= self.epsilon
+
+
+# ---------------------------------------------------------------------------
+# Block schedules (paper §5.3, generalized)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSchedule:
+    """Turns per-position accepts into a per-row block size k̂ (stateful)."""
+
+    def init_state(self, b: int) -> Any:
+        return ()
+
+    def block_size(self, accepts: jnp.ndarray, remaining: jnp.ndarray,
+                   state: Any):
+        """accepts (B, k) bool, remaining (B,) int32 ->
+        (k̂ (B,) int32 in [1, min(k, remaining)], new state)."""
+        raise NotImplementedError
+
+
+def _prefix_len(accepts: jnp.ndarray) -> jnp.ndarray:
+    """Longest accepted prefix per row: (B, k) bool -> (B,) int32."""
+    return jnp.sum(jnp.cumprod(accepts.astype(I32), axis=1), axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticSchedule(BlockSchedule):
+    """§5.3 minimum block size: k̂ = max(prefix, min_block), clamped to the
+    remaining budget.  Stateless — min_block=1 is the paper's default."""
+
+    min_block: int = 1
+
+    def block_size(self, accepts, remaining, state):
+        khat = _prefix_len(accepts)
+        if self.min_block > 1:
+            khat = jnp.maximum(khat, min(self.min_block, accepts.shape[1]))
+        return jnp.maximum(jnp.minimum(khat, remaining), 1), state
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveSchedule(BlockSchedule):
+    """Dynamic §5.3: a per-row cap on k̂ driven by the running acceptance
+    rate.  An EMA of k̂/k grows the cap (toward the full block) while
+    acceptance is high and shrinks it (toward ``min_block``) when proposals
+    keep missing — bounding the tokens a row can over-commit on workloads
+    where its acceptance rate has collapsed.
+
+    State (per row): ``rate`` f32 EMA of k̂/cap, ``cap`` int32 current cap.
+    """
+
+    min_block: int = 1
+    decay: float = 0.7          # EMA decay of the acceptance-rate estimate
+    grow: float = 0.8           # rate above which the cap grows by 1
+    shrink: float = 0.4         # rate below which the cap shrinks by 1
+
+    def init_state(self, b: int) -> Any:
+        return {"rate": jnp.ones((b,), jnp.float32),
+                "cap": jnp.full((b,), jnp.iinfo(jnp.int32).max, I32)}
+
+    def block_size(self, accepts, remaining, state):
+        k = accepts.shape[1]
+        floor = max(min(self.min_block, k), 1)
+        cap = jnp.clip(state["cap"], floor, k)
+        accepted = jnp.minimum(jnp.maximum(_prefix_len(accepts), floor), cap)
+        khat = jnp.maximum(jnp.minimum(accepted, remaining), 1)
+        # rate tracks the un-clamped acceptance (the budget clamp at the end
+        # of a row's generation says nothing about proposal quality)
+        rate = (self.decay * state["rate"]
+                + (1 - self.decay) * accepted.astype(jnp.float32)
+                / cap.astype(jnp.float32))
+        cap = jnp.where(rate >= self.grow, jnp.minimum(cap + 1, k),
+                        jnp.where(rate <= self.shrink,
+                                  jnp.maximum(cap - 1, floor), cap))
+        return khat, {"rate": rate, "cap": cap}
+
+
+# ---------------------------------------------------------------------------
+# Drafters
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Drafter:
+    """Produces the next block of proposals from the verify forward.
+
+    ``init_state`` sees the decode entry point's inputs (``batch`` — e.g.
+    the source sentence for seq2seq; ``None`` in the serving engine, whose
+    admission path is prompt-only) and must return a pytree of
+    batch-leading ``(b, …)`` arrays, or ``()`` for stateless drafters.
+    """
+
+    def init_state(self, cfg, dec: DecodeConfig, batch: Optional[Dict],
+                   b: int) -> Any:
+        return ()
+
+    def draft(self, inputs: DraftInputs, state: Any):
+        """-> (proposals (B, k) int32 with slot 0 = verified token, state)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadsDrafter(Drafter):
+    """The paper's proposal mechanism: head p_{i+1}'s argmax at the accepted
+    slot proposes block slot i (already computed by the verify forward)."""
+
+    def draft(self, inputs: DraftInputs, state: Any):
+        head_argmax = jnp.argmax(inputs.logits, axis=-1)        # (B, k, K)
+        return _gather_slot(head_argmax, inputs.slot), state
+
+
+@dataclasses.dataclass(frozen=True)
+class InputCopyDrafter(Drafter):
+    """Aggressive-Decoding-style drafts for seq2seq: propose the source
+    tokens aligned with the next output positions (arXiv:2205.10350).
+
+    On copy-heavy targets (the paper's MT setting; grammar correction;
+    our synthetic copy task) the model's greedy output largely *is* the
+    source, so source-aligned drafts verify in long blocks even when the
+    prediction heads are weak or absent.  Slot 0 stays the verified greedy
+    token, so exact acceptance remains lossless on any task.
+
+    ``offset`` shifts the source index for tasks with a known alignment
+    offset (output position t reads ``src[t + offset]``).
+    """
+
+    offset: int = 0
+
+    def init_state(self, cfg, dec, batch, b):
+        if batch is None or "src" not in batch:
+            raise ValueError(
+                "InputCopyDrafter drafts from batch['src'] and is only "
+                "meaningful for seq2seq decoding — use HeadsDrafter (or a "
+                "custom drafter) for decoder-only models")
+        return {"src": jnp.asarray(batch["src"], I32)}
+
+    def draft(self, inputs: DraftInputs, state):
+        src = state["src"]
+        b, k = inputs.old_proposals.shape
+        head_argmax = jnp.argmax(inputs.logits, axis=-1)
+        verified = _gather_slot(head_argmax, inputs.slot)[:, 0]  # p_1 argmax
+        # decoder position 0 is BOS, so output index = position - 1; block
+        # slot i sits at position text_len + i
+        out_idx = (inputs.text_len[:, None] - 1 + self.offset
+                   + jnp.arange(k, dtype=I32)[None, :])
+        idx = jnp.clip(out_idx, 0, src.shape[1] - 1)
+        copied = jnp.take_along_axis(src, idx, axis=1)
+        proposals = copied.at[:, 0].set(verified)
+        return proposals, state
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKTreeDrafter(Drafter):
+    """Drafts ``fanout`` candidates per slot from each head and keeps the
+    chain the strongest head also likes (cf. arXiv:2404.09221's draft
+    re-ranking: the later heads are the weakest predictors, while p_1's
+    logits at the later block slots — conditioned on the previous draft
+    chain — are free to read off the same verify forward).
+
+    Per block slot i ≥ 1 the candidates are head p_{i+1}'s top-``fanout``
+    tokens at the accepted slot; each is scored by its head log-prob plus
+    p_1's log-prob at chain slot ``k̂-1+i`` (where the positions align —
+    beyond the block the chain term is dropped).  Stateless and lossless:
+    slot 0 is still the verified greedy token.
+    """
+
+    fanout: int = 4
+
+    def draft(self, inputs: DraftInputs, state):
+        logits = inputs.logits                                   # (B,k,K,V)
+        b, k_slots, k_heads, _ = logits.shape
+        head_logits = _gather_slot(logits, inputs.slot)          # (B,K,V)
+        head_logp = jax.nn.log_softmax(head_logits, axis=-1)
+        cand_logp, cand_ids = jax.lax.top_k(head_logp, self.fanout)
+
+        # p_1 at chain slot k̂-1+i predicts the same absolute position as
+        # next-block slot i (context: the draft chain just verified)
+        p1_logp = jax.nn.log_softmax(logits[:, :, 0, :], axis=-1)  # (B,k,V)
+        chain_slot = inputs.slot[:, None] + jnp.arange(k_heads,
+                                                       dtype=I32)[None, :]
+        valid = chain_slot <= k_slots - 1                        # (B,K)
+        idx = jnp.clip(chain_slot, 0, k_slots - 1)
+        chain_logp = jax.vmap(lambda p, i: p[i])(p1_logp, idx)   # (B,K,V)
+        chain_cand = jnp.take_along_axis(chain_logp, cand_ids, axis=-1)
+        score = cand_logp + jnp.where(valid[..., None], chain_cand, 0.0)
+
+        best = jnp.argmax(score, axis=-1)                        # (B,K)
+        proposals = jnp.take_along_axis(cand_ids, best[..., None],
+                                        axis=-1)[..., 0].astype(I32)
+        verified = jnp.argmax(head_logits[:, 0, :], axis=-1).astype(I32)
+        return proposals.at[:, 0].set(verified), state
+
+
+# ---------------------------------------------------------------------------
+# The composed policy + registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePolicy:
+    """Drafter × Acceptor × BlockSchedule behind every decode path."""
+
+    drafter: Drafter
+    acceptor: Acceptor
+    schedule: BlockSchedule
+    name: str = "custom"
+
+    def init_state(self, cfg, dec: DecodeConfig, batch: Optional[Dict],
+                   b: int) -> PolicyState:
+        return PolicyState(
+            drafter=self.drafter.init_state(cfg, dec, batch, b),
+            schedule=self.schedule.init_state(b))
+
+
+# name -> builder(dec) -> DecodePolicy.  The legacy criterion strings are
+# aliases for the heads-drafted policies, so ``DecodeConfig.criterion`` and
+# ``DecodeConfig.policy`` resolve through the same table.
+POLICY_BUILDERS: Dict[str, Callable[[DecodeConfig], DecodePolicy]] = {}
+
+
+def register_policy(name: str,
+                    builder: Callable[[DecodeConfig], DecodePolicy]) -> None:
+    if name in POLICY_BUILDERS:
+        raise ValueError(f"duplicate policy registration: {name!r}")
+    POLICY_BUILDERS[name] = builder
+
+
+def list_policies() -> list:
+    return sorted(POLICY_BUILDERS)
+
+
+def resolve_policy(dec: DecodeConfig,
+                   policy: Union[None, str, DecodePolicy] = None
+                   ) -> DecodePolicy:
+    """Resolve the policy a decode should run.
+
+    Precedence: an explicit ``DecodePolicy`` object > an explicit name >
+    ``dec.policy`` > the legacy ``dec.criterion`` alias.  Builders read
+    their knobs (top_k, epsilon, min_block) off ``dec``.
+    """
+    if isinstance(policy, DecodePolicy):
+        return policy
+    name = policy or dec.policy or dec.criterion
+    builder = POLICY_BUILDERS.get(name)
+    if builder is None:
+        raise ValueError(f"unknown decode policy {name!r}; "
+                         f"registered: {list_policies()}")
+    return builder(dec)
+
+
+def _schedule_for(dec: DecodeConfig) -> BlockSchedule:
+    return StaticSchedule(min_block=dec.min_block)
+
+
+register_policy("exact", lambda dec: DecodePolicy(
+    HeadsDrafter(), ExactAcceptor(), _schedule_for(dec), name="exact"))
+register_policy("topk", lambda dec: DecodePolicy(
+    HeadsDrafter(), TopKAcceptor(top_k=dec.top_k), _schedule_for(dec),
+    name="topk"))
+register_policy("distance", lambda dec: DecodePolicy(
+    HeadsDrafter(), DistanceAcceptor(epsilon=dec.epsilon), _schedule_for(dec),
+    name="distance"))
+register_policy("adaptive", lambda dec: DecodePolicy(
+    HeadsDrafter(), ExactAcceptor(),
+    AdaptiveSchedule(min_block=dec.min_block), name="adaptive"))
+register_policy("input_copy", lambda dec: DecodePolicy(
+    InputCopyDrafter(), ExactAcceptor(), _schedule_for(dec),
+    name="input_copy"))
+register_policy("topk_tree", lambda dec: DecodePolicy(
+    TopKTreeDrafter(fanout=max(dec.top_k, 2)), ExactAcceptor(),
+    _schedule_for(dec), name="topk_tree"))

@@ -1,5 +1,10 @@
 """Verification criteria (paper §3 exact match, §5.1 top-k, §5.2 distance,
-§5.3 minimum block size).
+§5.3 minimum block size) — legacy functional entry points.
+
+The implementations live in ``core.policy`` as first-class ``Acceptor`` /
+``BlockSchedule`` objects; these wrappers keep the original
+criterion-string API (and the seed tests) working by resolving
+``dec.criterion`` through the policy registry.
 
 Index convention for one BPD iteration (0-based within the block):
   * ``proposals[:, i]`` is the token proposed for absolute position j+1+i.
@@ -12,10 +17,10 @@ Index convention for one BPD iteration (0-based within the block):
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.config import DecodeConfig
+from repro.core.policy import StaticSchedule, resolve_policy
 
 
 def position_accepts(proposals: jnp.ndarray, p1_logits: jnp.ndarray,
@@ -26,25 +31,7 @@ def position_accepts(proposals: jnp.ndarray, p1_logits: jnp.ndarray,
     p1_logits : (B, k, V) — p_1 logits at block slots 0..k-1
     returns   : (B, k) bool; column 0 is always True.
     """
-    b, k = proposals.shape
-    # slot i-1 verifies proposal i
-    ver_logits = p1_logits[:, : k - 1, :]                      # (B, k-1, V)
-    cand = proposals[:, 1:]                                    # (B, k-1)
-
-    if dec.criterion == "exact":
-        greedy = jnp.argmax(ver_logits, axis=-1)
-        ok = cand == greedy
-    elif dec.criterion == "topk":
-        _, top_ids = jax.lax.top_k(ver_logits, dec.top_k)      # (B, k-1, topk)
-        ok = jnp.any(top_ids == cand[..., None], axis=-1)
-    elif dec.criterion == "distance":
-        greedy = jnp.argmax(ver_logits, axis=-1)
-        ok = jnp.abs(cand - greedy) <= dec.epsilon
-    else:
-        raise ValueError(dec.criterion)
-
-    first = jnp.ones((b, 1), bool)
-    return jnp.concatenate([first, ok], axis=1)
+    return resolve_policy(dec).acceptor.accepts(proposals, p1_logits)
 
 
 def accepted_block_size(accepts: jnp.ndarray, dec: DecodeConfig,
@@ -54,9 +41,6 @@ def accepted_block_size(accepts: jnp.ndarray, dec: DecodeConfig,
 
     accepts: (B, k) bool -> (B,) int32 in [1, k] (before remaining clamp).
     """
-    prefix = jnp.cumprod(accepts.astype(jnp.int32), axis=1)
-    khat = jnp.sum(prefix, axis=1)
-    if dec.min_block > 1:
-        k = accepts.shape[1]
-        khat = jnp.maximum(khat, min(dec.min_block, k))
-    return jnp.maximum(jnp.minimum(khat, remaining), 1)
+    khat, _ = StaticSchedule(min_block=dec.min_block).block_size(
+        accepts, remaining, ())
+    return khat

@@ -2,7 +2,13 @@
 blockwise parallel decoding.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
-        --ckpt-dir /tmp/ckpt --batch 4 --max-new 32 [--criterion topk --top-k 2]
+        --ckpt-dir /tmp/ckpt --batch 4 --max-new 32 \
+        [--criterion topk --top-k 2] [--policy topk_tree] [--sched sjf]
+
+``--policy`` selects a registered decode policy (drafter × acceptor ×
+block schedule, see README "Decode policies"); unset, the legacy
+``--criterion`` alias applies.  ``--sched`` picks the engine's admission
+order (fcfs/sjf).
 
 Runs the prefill + serve_step loop (the same entry points the multi-pod
 dry-run lowers) on the host devices with the reduced config.
@@ -43,13 +49,18 @@ def main():
     ap.add_argument("--block-k", type=int, default=0)
     ap.add_argument("--criterion", default="exact",
                     choices=["exact", "topk", "distance"])
+    ap.add_argument("--policy", default="",
+                    help="decode policy name (drafter × acceptor × "
+                         "schedule; see repro.config.list_policies()); "
+                         "empty = the --criterion legacy alias")
     ap.add_argument("--top-k", type=int, default=2)
     ap.add_argument("--epsilon", type=float, default=2.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", action="store_true",
                     help="serve through the continuous-batching engine "
                          "(slots + admission) instead of one static batch")
-    ap.add_argument("--policy", default="fcfs", choices=["fcfs", "sjf"])
+    ap.add_argument("--sched", default="fcfs", choices=["fcfs", "sjf"],
+                    help="engine admission policy (scheduler)")
     ap.add_argument("--mesh-data", type=int, default=0,
                     help="data-parallel shards (0 = no mesh, single device)")
     ap.add_argument("--mesh-model", type=int, default=1,
@@ -67,8 +78,8 @@ def main():
 
     dec = DecodeConfig(max_new_tokens=args.max_new,
                        block_k=args.block_k or cfg.bpd_k,
-                       criterion=args.criterion, top_k=args.top_k,
-                       epsilon=args.epsilon)
+                       criterion=args.criterion, policy=args.policy,
+                       top_k=args.top_k, epsilon=args.epsilon)
     task = MarkovLM(vocab=min(cfg.vocab_size, 256), temperature=0.2,
                     seed=args.seed)
     prompts = jnp.asarray(task.sample(np.random.default_rng(args.seed + 1),
@@ -99,7 +110,7 @@ def main():
     dt = time.time() - t0
 
     print(f"[serve] {args.batch} requests, {args.max_new} tokens each, "
-          f"criterion={args.criterion}")
+          f"policy={sess.policy.name}")
     print(f"[serve] mean accepted block size k̂ = "
           f"{float(stats['mean_accepted']):.2f}  "
           f"invocations = {int(stats['invocations'])} "
@@ -119,7 +130,7 @@ def serve_engine(params, cfg, dec, args, task, *, mesh=None):
                         max_prompt_len=args.prompt_len,
                         max_new_cap=args.max_new)
     engine = ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh)
-    sched = Scheduler(engine, policy=args.policy)
+    sched = Scheduler(engine, policy=args.sched)
 
     rng = np.random.default_rng(args.seed + 2)
     n = 2 * args.batch
@@ -137,7 +148,7 @@ def serve_engine(params, cfg, dec, args, task, *, mesh=None):
     stats = aggregate_stats(finished, wall)
 
     print(f"[serve] engine: {n} requests over {args.batch} slots "
-          f"(policy={args.policy}, criterion={args.criterion})")
+          f"(sched={args.sched}, policy={engine.policy.name})")
     print(f"[serve] {stats['total_tokens']} tokens in "
           f"{stats['total_invocations']} invocations, "
           f"{stats['tokens_per_sec']:.0f} tok/s, "

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.config import INPUT_SHAPES, DecodeConfig, ModelConfig, TrainConfig
 from repro.core import decode as decode_lib
+from repro.core.policy import resolve_policy
 from repro.core.train import loss_fn_for
 from repro.models import model as model_lib
 from repro.optim import optimizer_init, optimizer_update
@@ -118,22 +119,28 @@ def make_serve_step(cfg: ModelConfig, dec: DecodeConfig, *, seq_len: int,
     prefix = cfg.num_meta_tokens + (
         cfg.num_patch_tokens if cfg.modality == "vision_text" else 0)
     backend = decode_lib.causal_lm_backend(cfg, kv_chunk=kv_chunk)
+    pol = resolve_policy(dec)
 
     def serve_step(params, state: decode_lib.BPDState) -> decode_lib.BPDState:
         return decode_lib.bpd_iteration(
             params, cfg, dec, backend, state,
-            prefix_offset=prefix, prompt_len=seq_len - prefix,
-            max_new=max_new)
+            prefix_offset=prefix, max_new=max_new, policy=pol)
 
     return serve_step
 
 
 def serve_state_struct(cfg: ModelConfig, dec: DecodeConfig, *, batch: int,
                        seq_len: int, max_new: int = 4096):
-    """ShapeDtypeStructs of the BPD serving state at context ``seq_len``."""
+    """ShapeDtypeStructs of the BPD serving state at context ``seq_len``.
+
+    Includes the loop-carried policy state for ``dec``'s resolved policy
+    (stateful schedules/drafters carry per-row arrays; the serve path is
+    prompt-only, so drafters that need decode-entry inputs reject here).
+    """
     block_k = dec.block_k or cfg.bpd_k
     prefix = cfg.num_meta_tokens + (
         cfg.num_patch_tokens if cfg.modality == "vision_text" else 0)
+    pol = resolve_policy(dec)
 
     def mk():
         caches = model_lib.init_caches(cfg, batch, seq_len + max_new, block_k)
@@ -146,6 +153,7 @@ def serve_state_struct(cfg: ModelConfig, dec: DecodeConfig, *, batch: int,
             finished=jnp.zeros((batch,), bool),
             iters=jnp.zeros((), I32),
             generated=jnp.zeros((batch,), I32),
+            policy_state=pol.init_state(cfg, dec, None, batch),
         )
 
     return jax.eval_shape(mk)

@@ -21,7 +21,15 @@ functions (init / admit / step / evict) are owned by a
 ``bpd_decode`` — and compile exactly once (padded prompts, traced slot
 indices).  Pass ``mesh=`` (or a prebuilt ``session=``) to shard the slot
 batch over the data axes and the model over the tensor axis; the engine's
-host logic is identical in both placements.
+host logic is identical in both placements.  ``policy=`` (or the
+session's) selects the ``DecodePolicy``; per-slot policy state lives in
+``SlotBatch.policy_state`` and is reset on admit/evict.
+
+The host loop performs exactly ONE device→host sync per step: the jitted
+step returns a fused (S,) int8 status (bit 0 = active, bit 1 =
+harvestable) alongside the donated slot state, and ``free_slots`` /
+``has_active`` / a no-finish ``harvest`` read the host-side mirror
+(``num_host_syncs`` counts the transfers; gated in tests).
 
 Padded prefill is safe because cache visibility is governed by absolute
 positions: a stale entry with stored position p is only attended when
@@ -54,7 +62,7 @@ class ContinuousBatchingEngine:
 
     def __init__(self, params, cfg: ModelConfig, dec: DecodeConfig,
                  ecfg: EngineConfig, *, mesh=None,
-                 session: Optional[DecodeSession] = None):
+                 session: Optional[DecodeSession] = None, policy=None):
         if cfg.block_type != "attn":
             raise NotImplementedError(
                 f"serving engine requires an attention-cache family "
@@ -68,8 +76,9 @@ class ContinuousBatchingEngine:
             raise NotImplementedError("serving engine is decoder-only")
 
         self.session = session if session is not None else DecodeSession(
-            params, cfg, dec, mesh=mesh)
+            params, cfg, dec, mesh=mesh, policy=policy)
         ecfg.validate(dec=self.session.dec, mesh=self.session.mesh)
+        self.policy = self.session.policy
 
         # the session is the source of truth for model/decode config — a
         # caller-provided session may differ from the cfg/dec args, and the
@@ -86,6 +95,12 @@ class ContinuousBatchingEngine:
         self.slot_meta: List[Optional[dict]] = [None] * ecfg.num_slots
         self.num_admits = 0     # prefill calls — device work accounting
         self.num_steps = 0      # batch iteration calls
+        # host mirror of the per-slot status (bit 0 = active, bit 1 =
+        # harvestable).  step() refreshes it from the device in ONE fused
+        # transfer; admit/evict update it host-side (their effects are known
+        # without a readback), so free_slots/has_active/harvest never sync.
+        self._status = np.zeros((ecfg.num_slots,), np.int8)
+        self.num_host_syncs = 0  # device->host readbacks (regression guard)
 
     @property
     def params(self):
@@ -95,11 +110,11 @@ class ContinuousBatchingEngine:
     # -- host-side API -------------------------------------------------------
 
     def free_slots(self) -> List[int]:
-        active = np.asarray(self.state.active)
-        return [i for i in range(self.ecfg.num_slots) if not active[i]]
+        return [i for i in range(self.ecfg.num_slots)
+                if not self._status[i] & 1]
 
     def has_active(self) -> bool:
-        return bool(np.any(np.asarray(self.state.active)))
+        return bool(np.any(self._status & 1))
 
     def admit(self, req: Request, *, now: Optional[float] = None) -> int:
         """Admit a request into a free slot; returns the slot index."""
@@ -118,6 +133,7 @@ class ContinuousBatchingEngine:
             self.params, self.state, jnp.asarray(slot, I32),
             jnp.asarray(prompt), jnp.asarray(p, I32),
             jnp.asarray(max_new, I32))
+        self._status[slot] = 1          # known host-side: no readback needed
         self.num_admits += 1
         admit_time = time.monotonic() if now is None else now
         if req.arrival is None:
@@ -131,12 +147,23 @@ class ContinuousBatchingEngine:
     def step(self, *, now: Optional[float] = None) -> List[FinishedRequest]:
         """One BPD iteration over all active slots, then harvest+evict."""
         self.num_steps += 1
-        self.state = self._fns.step(self.params, self.state)
+        self.state, status = self._fns.step(self.params, self.state)
+        # the ONE per-step device->host round-trip: a fused (S,) int8 array
+        # carrying both the active and the finished bits (the harvest
+        # decision), instead of pulling state.active and state.finished
+        # separately
+        self._status = np.array(status)  # writable host copy
+        self.num_host_syncs += 1
         return self.harvest(now=now)
 
     def harvest(self, *, now: Optional[float] = None) -> List[FinishedRequest]:
-        """Retire finished slots: copy outputs out, free the slots."""
-        done_mask = np.asarray(self.state.active & self.state.finished)
+        """Retire finished slots: copy outputs out, free the slots.
+
+        Decides from the host-cached status — the common no-finish step
+        costs zero additional device syncs; the big per-slot arrays are
+        only pulled when something actually finished.
+        """
+        done_mask = (self._status & 2).astype(bool)
         if not done_mask.any():
             return []
         t = time.monotonic() if now is None else now
@@ -144,6 +171,7 @@ class ContinuousBatchingEngine:
         text_len = np.asarray(self.state.text_len)
         generated = np.asarray(self.state.generated)
         invocations = np.asarray(self.state.invocations)
+        self.num_host_syncs += 1  # one harvest pull (4 arrays, one sync site)
         out = []
         for i in np.nonzero(done_mask)[0]:
             meta = self.slot_meta[i]
@@ -160,6 +188,7 @@ class ContinuousBatchingEngine:
                 finish_time=t))
             self.slot_meta[i] = None
         self.state = self._fns.evict(self.state, jnp.asarray(done_mask))
+        self._status[done_mask] = 0     # known host-side: freed, inactive
         return out
 
     # -- diagnostics ---------------------------------------------------------

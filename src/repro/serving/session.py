@@ -44,9 +44,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import DecodeConfig, ModelConfig
 from repro.core import decode as decode_lib
+from repro.core import policy as policy_lib
 from repro.models import model as model_lib
 from repro.serving.types import EngineConfig, SlotBatch
-from repro.sharding import policy
+from repro.sharding import policy as sharding_policy
 
 I32 = jnp.int32
 
@@ -66,25 +67,35 @@ class ServingFns(NamedTuple):
 
     init: Callable      # () -> SlotBatch (mesh-placed when sharded)
     admit: Callable     # (params, state, slot, prompt, plen, max_new) -> state
-    step: Callable      # (params, state) -> state
+    step: Callable      # (params, state) -> (state, status (S,) int8)
     evict: Callable     # (state, mask) -> state
 
 
 class DecodeSession:
-    """Sharding-aware owner of params + jitted decode entry points."""
+    """Sharding-aware owner of params + jitted decode entry points.
+
+    ``policy`` fixes the decode policy (drafter × acceptor × block
+    schedule) for the session's lifetime, exactly like ``dec``: every
+    entry point is jitted once per (policy, geometry), and the policy's
+    loop-carried state is part of the sharded decode state
+    (``sharding.policy.state_specs`` / ``slot_specs`` treat its
+    batch-leading leaves like any other per-row array).
+    """
 
     def __init__(self, params, cfg: ModelConfig, dec: DecodeConfig, *,
                  mesh=None, kv_chunk: int = 0, backend=None,
-                 jit: Optional[bool] = None, donate: Optional[bool] = None):
+                 jit: Optional[bool] = None, donate: Optional[bool] = None,
+                 policy=None):
         self.cfg = cfg
         self.dec = dec
+        self.policy = policy_lib.resolve_policy(dec, policy)
         self.mesh = mesh
         self.kv_chunk = kv_chunk
         self.backend = backend
         self.jit = (mesh is not None) if jit is None else bool(jit)
         self._donate = donate
         if mesh is not None:
-            self.param_shardings = policy.param_shardings(params, mesh)
+            self.param_shardings = sharding_policy.param_shardings(params, mesh)
             self.params = jax.device_put(params, self.param_shardings)
         else:
             self.param_shardings = None
@@ -128,9 +139,9 @@ class DecodeSession:
         cfg, mesh = self.cfg, self.mesh
 
         def constrain(state):
-            specs = policy.state_specs(cfg, state, mesh)
+            specs = sharding_policy.state_specs(cfg, state, mesh)
             return jax.lax.with_sharding_constraint(
-                state, policy.named(mesh, specs))
+                state, sharding_policy.named(mesh, specs))
 
         return constrain
 
@@ -138,7 +149,7 @@ class DecodeSession:
         """Explicit output shardings: batch-leading arrays over the data
         axes, scalars/aggregates replicated."""
         mesh = self.mesh
-        ax = policy.batch_axes(mesh, batch_size)
+        ax = sharding_policy.batch_axes(mesh, batch_size)
 
         def rule(s):
             if s.ndim >= 1 and s.shape[0] == batch_size:
@@ -161,7 +172,8 @@ class DecodeSession:
         mesh = self.mesh
         b = next(iter(batch.values())).shape[0]
         in_sh = (self.param_shardings,
-                 policy.named(mesh, policy.batch_specs(mesh, batch)),
+                 sharding_policy.named(
+                     mesh, sharding_policy.batch_specs(mesh, batch)),
                  *extra_in)
         out_sh = self._out_shardings(fn, b, _structs(self.params),
                                      _structs(batch), *extra_structs)
@@ -172,11 +184,11 @@ class DecodeSession:
 
     def decode(self, batch: Dict, *, max_new_rows=None):
         """Blockwise parallel decode (causal LM).  See core.decode.bpd_decode."""
-        cfg, dec = self.cfg, self.dec
+        cfg, dec, pol = self.cfg, self.dec, self.policy
         if not self.jit:
             return decode_lib._bpd_decode_impl(
                 self.params, cfg, dec, batch, max_new_rows,
-                backend=self.backend, kv_chunk=self.kv_chunk)
+                backend=self.backend, kv_chunk=self.kv_chunk, policy=pol)
 
         b = batch["tokens"].shape[0]
         budget = (jnp.full((b,), dec.max_new_tokens, I32)
@@ -189,15 +201,15 @@ class DecodeSession:
             def fn(params, batch, budget):
                 return decode_lib._bpd_decode_impl(
                     params, cfg, dec, batch, budget, backend=backend,
-                    kv_chunk=kv_chunk, constrain=constrain)
+                    kv_chunk=kv_chunk, constrain=constrain, policy=pol)
 
             extra_in, extra_structs = (), (jax.ShapeDtypeStruct((b,), I32),)
             if self.mesh is not None:
-                ax = policy.batch_axes(self.mesh, b)
+                ax = sharding_policy.batch_axes(self.mesh, b)
                 extra_in = (NamedSharding(self.mesh, P(ax)),)
             return self._jit_entry(fn, batch, extra_in, extra_structs)
 
-        fn = self._get(("bpd",) + _geometry(batch), build)
+        fn = self._get(("bpd", pol.name) + _geometry(batch), build)
         return fn(self.params, batch, budget)
 
     def greedy(self, batch: Dict):
@@ -223,21 +235,21 @@ class DecodeSession:
 
     def decode_seq2seq(self, batch: Dict):
         """Encode once, BPD the decoder.  See core.decode.bpd_decode_seq2seq."""
-        cfg, dec = self.cfg, self.dec
+        cfg, dec, pol = self.cfg, self.dec, self.policy
         if not self.jit:
             return decode_lib._bpd_decode_seq2seq_impl(
-                self.params, cfg, dec, batch)
+                self.params, cfg, dec, batch, policy=pol)
 
         def build():
             constrain = self._constrain()
 
             def fn(params, batch):
                 return decode_lib._bpd_decode_seq2seq_impl(
-                    params, cfg, dec, batch, constrain=constrain)
+                    params, cfg, dec, batch, constrain=constrain, policy=pol)
 
             return self._jit_entry(fn, batch)
 
-        fn = self._get(("s2s",) + _geometry(batch), build)
+        fn = self._get(("s2s", pol.name) + _geometry(batch), build)
         return fn(self.params, batch)
 
     # -- serving (continuous batching) ---------------------------------------
@@ -251,6 +263,7 @@ class DecodeSession:
         on a single device and on a ``("data", "model")`` mesh alike.
         """
         cfg, dec, mesh = self.cfg, self.dec, self.mesh
+        pol = self.policy
         block_k = dec.block_k or cfg.bpd_k
         prefix = cfg.num_meta_tokens
         context_len = prefix + ecfg.max_prompt_len + ecfg.max_new_cap
@@ -272,12 +285,16 @@ class DecodeSession:
                 generated=zeros(),
                 max_new=zeros(),
                 invocations=zeros(),
+                # prompt-only admission: drafters that need decode-entry
+                # inputs (batch["src"]) reject the engine here, at build time
+                policy_state=pol.init_state(cfg, dec, None, s),
             )
 
         slot_sh = cache_sh = None
         if mesh is not None:
             struct = jax.eval_shape(init_slots)
-            slot_sh = policy.named(mesh, policy.slot_specs(cfg, struct, mesh))
+            slot_sh = sharding_policy.named(
+                mesh, sharding_policy.slot_specs(cfg, struct, mesh))
             cache_sh = slot_sh.caches
 
         def admit(params, state: SlotBatch, slot, prompt, prompt_len,
@@ -298,11 +315,22 @@ class DecodeSession:
             last = jax.lax.dynamic_index_in_dim(
                 hidden[0], prefix + prompt_len - 1, axis=0, keepdims=False)
             logits = model_lib.all_head_logits(params, cfg, last)  # (K, V)
-            proposals = jnp.argmax(logits[:block_k], axis=-1).astype(I32)
+
+            # per-slot policy state resets on admission — a fresh request
+            # must not inherit the previous occupant's drafter/schedule
+            # state — and the policy's drafter proposes the first block
+            row_ps = pol.init_state(cfg, dec, None, 1)
+            row_props, row_ds = decode_lib.initial_draft(
+                pol, logits[None], prompt_len, block_k, row_ps.drafter)
+            proposals = row_props[0]
+            row_ps = row_ps._replace(drafter=row_ds)
 
             row_tokens = jnp.zeros((buf_len,), I32)
             row_tokens = row_tokens.at[:ecfg.max_prompt_len].set(prompt)
             upd = lambda arr, val: arr.at[slot].set(val)  # noqa: E731
+            policy_state = jax.tree_util.tree_map(
+                lambda full, row: full.at[slot].set(row[0]),
+                state.policy_state, row_ps)
             return state._replace(
                 tokens=upd(state.tokens, row_tokens),
                 text_len=upd(state.text_len, prompt_len),
@@ -315,28 +343,44 @@ class DecodeSession:
                 generated=upd(state.generated, 0),
                 max_new=upd(state.max_new, max_new),
                 invocations=upd(state.invocations, 1),  # the prefill call
+                policy_state=policy_state,
             )
 
-        def step(params, state: SlotBatch) -> SlotBatch:
+        def step(params, state: SlotBatch):
             bst = decode_lib.BPDState(
                 tokens=state.tokens, text_len=state.text_len,
                 proposals=state.proposals, caches=state.caches,
                 finished=state.finished, iters=jnp.zeros((), I32),
-                generated=state.generated)
+                generated=state.generated, policy_state=state.policy_state)
             out = decode_lib.bpd_iteration(
                 params, cfg, dec, backend, bst, prefix_offset=prefix,
-                max_new=state.max_new, active=state.active)
+                max_new=state.max_new, active=state.active, policy=pol)
             stepped = state.active & ~state.finished
-            return state._replace(
+            new_state = state._replace(
                 tokens=out.tokens, text_len=out.text_len,
                 proposals=out.proposals, caches=out.caches,
                 finished=out.finished, generated=out.generated,
-                invocations=state.invocations + stepped.astype(I32))
+                invocations=state.invocations + stepped.astype(I32),
+                policy_state=out.policy_state)
+            # fused harvest decision: one tiny (S,) array carries both the
+            # active and the finished bits, so the host loop round-trips a
+            # single transfer per step (bit 0 = active, bit 1 = harvestable)
+            status = (state.active.astype(jnp.int8)
+                      + 2 * (state.active & out.finished).astype(jnp.int8))
+            return new_state, status
 
         def evict(state: SlotBatch, mask) -> SlotBatch:
+            # evicted slots also drop their policy state, so a paused slot
+            # can never leak schedule/drafter history into a later request
+            fresh = pol.init_state(cfg, dec, None, s)
+            policy_state = jax.tree_util.tree_map(
+                lambda full, init: jnp.where(
+                    mask.reshape((-1,) + (1,) * (init.ndim - 1)), init, full),
+                state.policy_state, fresh)
             return state._replace(
                 active=state.active & ~mask,
-                caches=model_lib.reset_cache_rows(state.caches, mask))
+                caches=model_lib.reset_cache_rows(state.caches, mask),
+                policy_state=policy_state)
 
         if mesh is None:
             return ServingFns(init=jax.jit(init_slots),
@@ -345,7 +389,7 @@ class DecodeSession:
                               evict=jax.jit(evict))
 
         rep = NamedSharding(mesh, P())
-        mask_sh = NamedSharding(mesh, P(policy.batch_axes(mesh, s)))
+        mask_sh = NamedSharding(mesh, P(sharding_policy.batch_axes(mesh, s)))
         state_dn = (1,) if self.donate else ()
         return ServingFns(
             init=self._with_mesh(jax.jit(init_slots, out_shardings=slot_sh)),
@@ -356,7 +400,7 @@ class DecodeSession:
                 out_shardings=slot_sh, donate_argnums=state_dn)),
             step=self._with_mesh(jax.jit(
                 step, in_shardings=(self.param_shardings, slot_sh),
-                out_shardings=slot_sh, donate_argnums=state_dn)),
+                out_shardings=(slot_sh, rep), donate_argnums=state_dn)),
             evict=self._with_mesh(jax.jit(
                 evict, in_shardings=(slot_sh, mask_sh),
                 out_shardings=slot_sh,

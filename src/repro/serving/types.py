@@ -35,6 +35,8 @@ class SlotBatch(NamedTuple):
     generated: "jnp.ndarray"   # (S,) accepted tokens so far
     max_new: "jnp.ndarray"     # (S,) per-slot generation budget
     invocations: "jnp.ndarray" # (S,) model calls spent on this request
+    policy_state: Any = ()     # per-slot DecodePolicy state (batch-leading
+                               # leaves; reset on admit/evict)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -202,6 +202,13 @@ def state_specs(cfg: ModelConfig, state: Any, mesh: Mesh, *,
     every other (B, ...) array shards its leading dim over the data axes,
     and scalars (loop counters) are replicated.  Works on concrete arrays
     and on ``ShapeDtypeStruct`` trees alike.
+
+    The ``policy_state`` field (a ``core.policy.PolicyState`` pytree of
+    loop-carried drafter/schedule state) is covered by the same rule: the
+    policy contract requires batch-leading ``(B, ...)`` leaves, so e.g. an
+    ``InputCopyDrafter``'s source batch or an ``AdaptiveSchedule``'s
+    per-row cap shard over the data axes with the rest of the decode
+    state.
     """
     b = batch_size if batch_size is not None else state.tokens.shape[0]
     ax = batch_axes(mesh, b)

@@ -116,6 +116,39 @@ def test_greedy_token_identical(session, dense):
     np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
 
 
+@pytest.mark.parametrize("dec_kw", [
+    dict(criterion="topk", top_k=2),       # legacy string aliases …
+    dict(criterion="distance", epsilon=2.0),
+    dict(policy="adaptive"),               # … and policy-native names
+    dict(policy="topk_tree"),
+])
+def test_policies_token_identical_sharded(mesh, dense, dec_kw):
+    """Every criterion alias / registered policy decodes token-identically
+    through a mesh-backed session (policy state sharded with the loop)."""
+    cfg, params, dec, batch = dense
+    d = dec.replace(**dec_kw)
+    ref_t, ref_s = D.bpd_decode(params, cfg, d, batch)
+    out_t, out_s = D.bpd_decode(params, cfg, d, batch, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(ref_t), np.asarray(out_t))
+    np.testing.assert_array_equal(np.asarray(ref_s["generated"]),
+                                  np.asarray(out_s["generated"]))
+    assert int(ref_s["iterations"]) == int(out_s["iterations"])
+
+
+def test_input_copy_policy_sharded_seq2seq(mesh):
+    """The source-drafting policy (loop-carried drafter state holding the
+    src batch) survives sharding token-identically."""
+    cfg = tiny_seq2seq()
+    params = S.init(jax.random.PRNGKey(4), cfg)
+    dec = DecodeConfig(max_new_tokens=12, block_k=4, policy="input_copy")
+    batch = {"src": jax.random.randint(jax.random.PRNGKey(5), (2, 6), 1,
+                                       cfg.vocab_size)}
+    ref, ref_s = D.bpd_decode_seq2seq(params, cfg, dec, batch)
+    out, out_s = D.bpd_decode_seq2seq(params, cfg, dec, batch, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    assert int(ref_s["iterations"]) == int(out_s["iterations"])
+
+
 def test_seq2seq_token_identical(mesh):
     cfg = tiny_seq2seq()
     params = S.init(jax.random.PRNGKey(2), cfg)
