@@ -8,12 +8,24 @@ separates the policy axes the API exposes:
 
   * ``exact`` / ``topk`` / ``distance`` — the legacy acceptor criteria over
     ``HeadsDrafter`` (paper §3, §5.1, §5.2);
-  * ``adaptive`` — the k̂-driven dynamic block schedule;
+  * ``adaptive`` — the k̂-driven dynamic block schedule.  The sweep config
+    (block_k = 8, 24-token outputs) is sized so the cap actually ENGAGES:
+    mid-quality heads accept ≈1.5/8 per iteration, the running-rate EMA
+    falls through the shrink threshold within a few iterations, and the
+    shrunken cap clamps the occasional long accepted prefix — so the
+    adaptive rows must differ from ``exact`` (asserted here and gated in
+    CI; at the old block_k = 4 smoke config the cap never bound and the
+    rows were metric-identical to ``exact``);
   * ``input_copy`` — source-sentence drafts (arXiv:2205.10350): on this
     workload it must beat ``HeadsDrafter``+exact on mean-k̂, which the CI
     bench-smoke asserts;
   * ``topk_tree`` — per-slot candidate re-ranking against p_1's chain
-    logits (arXiv:2404.09221-style draft improvement).
+    logits (arXiv:2404.09221-style draft improvement);
+  * ``draft_model`` — the speculative draft-model drafter: a 2-layer
+    causal student DISTILLED from the trained workbench teacher
+    (``core.distill.distill_seq2seq_to_causal_batches``, paper §6.2 reuse)
+    proposes the block autoregressively through its own ``ModelBundle``;
+    CI gates that it beats heads+exact on mean-k̂.
 
 Everything is seeded and CPU-deterministic; ``benchmarks/run.py --smoke``
 folds the rows into ``BENCH_decode.json`` and gates the committed
@@ -34,15 +46,20 @@ import numpy as np
 
 from benchmarks.workbench import attach_heads, train_steps
 from repro.config import DecodeConfig, ModelConfig, TrainConfig
-from repro.core import decode as D
+from repro.core.bundle import ModelBundle
+from repro.core.distill import distill_seq2seq_to_causal_batches
+from repro.models import model as M
 from repro.models import seq2seq as S
 from repro.optim import freeze_mask
 
-VOCAB, SRC_LEN, BATCH = 48, 12, 32
+VOCAB, SRC_LEN, BATCH = 48, 24, 32
 
 # the sweep order is the report order; exact is the gated baseline
 POLICIES = ("exact", "topk", "distance", "adaptive", "input_copy",
-            "topk_tree")
+            "topk_tree", "draft_model")
+
+# exact-acceptance policies: token-identical to exact by construction
+LOSSLESS = ("adaptive", "input_copy", "topk_tree", "draft_model")
 
 
 def _config(k: int, enabled: bool = True) -> ModelConfig:
@@ -53,15 +70,26 @@ def _config(k: int, enabled: bool = True) -> ModelConfig:
         bpd_enabled=enabled, max_seq_len=256, dtype="float32")
 
 
+def _draft_config() -> ModelConfig:
+    """The distilled student: a 2-layer causal LM (no encoder, no heads —
+    p_1 only), decode-cheap relative to the verify forward."""
+    return ModelConfig(
+        name="policy-sweep-draft", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, d_ff=128, vocab_size=VOCAB, bpd_enabled=False,
+        max_seq_len=256, dtype="float32")
+
+
 def _copy_task(seed: int = 0):
     """Low-entropy Markov source with target == source.
 
     Source drafts are exact (the Aggressive-Decoding regime), AND the
     target inherits the chain's redundancy — so frozen-base prediction
     heads have something learnable (unlike a uniform copy task, cf. the
-    ``PhraseMT`` docstring) and the ``exact`` baseline sits measurably
-    above its k̂ = 1 floor, giving the CI regression gate slack to fire.
-    Token 0 is reserved (BOS/PAD), hence the +1 shift.
+    ``PhraseMT`` docstring), the ``exact`` baseline sits measurably above
+    its k̂ = 1 floor (giving the CI regression gate slack to fire), and a
+    small causal student can learn the teacher's output distribution
+    without ever seeing the source.  Token 0 is reserved (BOS/PAD), hence
+    the +1 shift.
     """
     from repro.data.synthetic import MarkovLM
 
@@ -76,7 +104,7 @@ def _copy_batches(seed: int, task=None):
         yield {"src": src, "tgt": src.copy()}
 
 
-def build_model(k: int = 4, *, pretrain_steps: int = 600,
+def build_model(k: int = 8, *, pretrain_steps: int = 600,
                 head_steps: int = 300, seed: int = 0):
     """Pre-train the base model on the copy task, then attach heads (the
     shared ``benchmarks.workbench`` harness) with a frozen-base fine-tune
@@ -102,10 +130,41 @@ def build_model(k: int = 4, *, pretrain_steps: int = 600,
     return cfg, params
 
 
-def run(*, k: int = 4, seed: int = 0, pretrain_steps: int = 600,
-        head_steps: int = 300, eval_rows: int = 16) -> dict:
+def build_draft_student(cfg, params, *, n_distill_batches: int = 64,
+                        student_steps: int = 900, seed: int = 0):
+    """§6.2 reuse: greedy teacher decodes -> BOS-prefixed causal streams ->
+    a 2-layer student LM trained on them (the ``draft`` ModelBundle)."""
+    rng = np.random.default_rng(seed + 31)
+    task = _copy_task()
+    srcs = [(task.sample(rng, BATCH, SRC_LEN) + 1).astype(np.int32)
+            for _ in range(n_distill_batches)]
+    distilled = distill_seq2seq_to_causal_batches(params, cfg, srcs,
+                                                  max_new=SRC_LEN)
+    dcfg = _draft_config()
+    dparams = M.init(jax.random.PRNGKey(seed + 13), dcfg)
+    tc = TrainConfig(global_batch=BATCH, seq_len=SRC_LEN + 1, lr=3e-3,
+                     warmup_steps=max(student_steps // 10, 5),
+                     head_loss="mean")
+
+    def gen():
+        i = 0
+        while True:
+            yield distilled[i % len(distilled)]
+            i += 1
+
+    dparams, _ = train_steps(dcfg, tc, dparams, gen(), student_steps,
+                             seed=seed + 17)
+    return dcfg, dparams
+
+
+def run(*, k: int = 8, seed: int = 0, pretrain_steps: int = 900,
+        head_steps: int = 300, student_steps: int = 900,
+        eval_rows: int = 16) -> dict:
     cfg, params = build_model(k, pretrain_steps=pretrain_steps,
                               head_steps=head_steps, seed=seed)
+    dcfg, dparams = build_draft_student(cfg, params,
+                                        student_steps=student_steps,
+                                        seed=seed)
     rng = np.random.default_rng(seed + 11)
     src = (_copy_task().sample(rng, eval_rows, SRC_LEN) + 1).astype(np.int32)
 
@@ -116,11 +175,13 @@ def run(*, k: int = 4, seed: int = 0, pretrain_steps: int = 600,
     for name in POLICIES:
         dec = DecodeConfig(max_new_tokens=SRC_LEN, block_k=k, policy=name,
                            top_k=2, epsilon=2.0)
+        bundles = ({"draft": ModelBundle(dparams, dcfg)}
+                   if name == "draft_model" else None)
         # decode row-by-row (one jit per policy, geometry (1, SRC_LEN)):
         # the batched loop's global iteration count is gated by its slowest
         # row, which would floor mean-k̂ at 1.0 whenever ANY row rejects
         # everything — per-row decodes measure the honest k̂ distribution
-        sess = DecodeSession(params, cfg, dec, jit=True)
+        sess = DecodeSession(params, cfg, dec, jit=True, bundles=bundles)
         toks, iters, gen = [], [], []
         for r in range(eval_rows):
             t, stats = sess.decode_seq2seq({"src": jnp.asarray(src[r:r + 1])})
@@ -138,11 +199,19 @@ def run(*, k: int = 4, seed: int = 0, pretrain_steps: int = 600,
         # lossless policies (exact acceptance) must agree token-for-token
         if name == "exact":
             ref_tokens = toks
-        elif name in ("adaptive", "input_copy", "topk_tree"):
+        elif name in LOSSLESS:
             if not np.array_equal(toks, ref_tokens):
                 raise SystemExit(
                     f"LOSSLESSNESS VIOLATION: policy {name!r} changed the "
                     f"decoded tokens vs exact")
+    # the satellite gate's precondition: this config must exercise the
+    # adaptive cap (metric-identical rows mean the sweep lost its teeth)
+    if abs(results["adaptive"]["mean_khat"]
+           - results["exact"]["mean_khat"]) < 1e-9:
+        raise SystemExit(
+            "ADAPTIVE CAP NEVER ENGAGED: the adaptive rows are "
+            "metric-identical to exact — pick a sweep config where the "
+            "running-rate cap binds (see module docstring)")
     return results
 
 

@@ -15,8 +15,10 @@ CPU-scale reproduction (~30-45 min).  ``--smoke`` runs only the
 seconds-scale subset (kernels + roofline + policies) — the CI
 benchmark-smoke job pairs it with ``benchmarks/serve_throughput.py
 --smoke`` and FAILS if the ``exact`` policy's mean-k̂ regresses against
-the committed ``BENCH_decode.json`` baseline, or if no new drafter beats
-HeadsDrafter+exact.
+the committed ``BENCH_decode.json`` baseline, if no new drafter beats
+HeadsDrafter+exact, if the distilled ``draft_model`` drafter stops
+beating heads+exact, or if the ``adaptive`` rows collapse back to
+metric-identical-with-exact (cap never binding).
 """
 from __future__ import annotations
 
@@ -177,6 +179,18 @@ def main():
                 f"DRAFTER REGRESSION: no new drafter beats "
                 f"HeadsDrafter+exact (best {best_new:.3f} vs exact "
                 f"{new_exact:.3f}) — input_copy/topk_tree lost their edge")
+        draft = float(rows["policies/draft_model/mean_khat"])
+        if draft <= new_exact:
+            raise SystemExit(
+                f"DRAFT-MODEL REGRESSION: the distilled draft-model "
+                f"drafter (mean-k̂ {draft:.3f}) no longer beats "
+                f"heads+exact ({new_exact:.3f}) — the speculative path "
+                f"lost its edge (distillation, student size, or the "
+                f"draft-cache sync may have regressed)")
+        # (the adaptive-cap-must-engage gate lives INSIDE sweep.run() on
+        # the unrounded metrics — the rows here are rounded to 4 decimals,
+        # so re-checking them would false-fire on legitimately tiny
+        # differences)
 
     # repo-root perf-trajectory artifact (committed, so the smoke numbers
     # are diffable PR over PR; serve_throughput.py writes BENCH_serve.json).

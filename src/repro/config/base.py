@@ -152,7 +152,11 @@ class DecodeConfig:
     acceptor × block schedule); empty string falls back to the legacy
     ``criterion`` alias, so existing configs decode unchanged.  The policy
     builders read their knobs (``top_k``, ``epsilon``, ``min_block``) off
-    this config.
+    this config.  Policies whose drafter runs a second model
+    (``policy="draft_model"``) additionally need an auxiliary
+    ``core.bundle.ModelBundle`` passed to the session / decode entry
+    point (``bundles={"draft": ...}``) — model identity lives in bundles,
+    never in this config.
     """
 
     max_new_tokens: int = 64

@@ -29,6 +29,8 @@ from repro.core.policy import (
     register_policy,
     resolve_policy,
 )
+from repro.core.bundle import ModelBundle
+from repro.core.draft import DraftModelDrafter
 from repro.core.verify import accepted_block_size, position_accepts
 from repro.core.decode import (
     Backend,
@@ -58,6 +60,8 @@ __all__ = [
     "DistanceAcceptor",
     "Drafter",
     "DraftInputs",
+    "DraftModelDrafter",
+    "ModelBundle",
     "ExactAcceptor",
     "HeadsDrafter",
     "InputCopyDrafter",

@@ -1,0 +1,50 @@
+"""ModelBundle: one model's complete decode identity.
+
+The decode stack historically assumed exactly one parameter set + one
+``ModelConfig`` + one KV cache per session.  Speculative decoding with an
+independent draft model (the BPD-drafts follow-up, arXiv:2404.09221, and
+the lossless-verification framing of arXiv:2205.10350) breaks that
+assumption: the *verifier* stays the session's primary model, while a
+*drafter* runs a second, smaller model with its own params, config,
+backend and loop-carried cache.
+
+A ``ModelBundle`` packages everything one model needs to participate in a
+decode: parameters, config, the ``Backend`` factory that turns them into
+embed/decode/commit/head functions, and the knobs the sharding policy
+reads (``sharding.policy.param_shardings`` / ``cache_specs`` are both
+keyed off ``cfg``).  ``DecodeSession`` owns a primary bundle (its
+historical ``params``/``cfg`` arguments) plus optional auxiliary bundles
+by name; aux params are device_put per bundle and threaded into the
+jitted entry points as explicit arguments, so they shard, donate and
+cache-key exactly like the primary set.
+
+Only the *static* half of a bundle (cfg, kv_chunk, backend_factory) is
+bound into policy objects (``DecodePolicy.bind``); the params flow through
+``DraftInputs.aux`` as traced values so a bundle-aware drafter can run its
+own forward pass inside the decode loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.config import ModelConfig
+
+
+@dataclasses.dataclass(eq=False)
+class ModelBundle:
+    """params + config + backend factory for one model in a decode session.
+
+    ``backend_factory`` is ``(cfg, kv_chunk) -> core.decode.Backend``; None
+    means the decoder-only ``causal_lm_backend`` (consumers — e.g.
+    ``core.draft.DraftModelDrafter._backend`` — apply that default when
+    the bundle's static half is bound into them).  ``name`` is
+    informational (the session keys bundles by the dict key it receives
+    them under).
+    """
+
+    params: Any
+    cfg: ModelConfig
+    kv_chunk: int = 0
+    backend_factory: Optional[Callable] = None
+    name: str = ""

@@ -93,7 +93,8 @@ def _freeze_rows(frozen, old_tree, new_tree):
 def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
                   backend: Backend, state: BPDState, *,
                   prefix_offset: int, max_new, active=None,
-                  policy: Optional[DecodePolicy] = None) -> BPDState:
+                  policy: Optional[DecodePolicy] = None,
+                  aux_params=None) -> BPDState:
     """One combined predict/verify/accept step.
 
     max_new : int or (B,) int32 — per-row generation budget (the serving
@@ -104,6 +105,10 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
               finished rows.
     policy  : decode policy (drafter × acceptor × block schedule); None
               resolves ``dec.policy`` / the legacy ``dec.criterion`` alias.
+    aux_params : optional {bundle name: params} of the session's auxiliary
+              ``ModelBundle``s, exposed to the drafter via
+              ``DraftInputs.aux`` (e.g. the draft model's parameters for
+              the ``draft_model`` policy).
     """
     pol = policy_lib.resolve_policy(dec, policy)
     block_k = dec.block_k or cfg.bpd_k
@@ -149,9 +154,14 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
     finished = state.finished | has_eos | (generated >= max_new)
 
     # ---- next-block proposals (drafted from this same invocation) ----------
+    # the committed token at the new text_len - 1 (the last accepted slot;
+    # model-backed drafters re-feed it to keep their own cache in sync)
+    prev_token = jnp.take_along_axis(
+        state.proposals, jnp.maximum(khat - 1, 0)[:, None], axis=1)[:, 0]
     draft_in = DraftInputs(
         logits=logits, khat=khat, slot=jnp.maximum(khat - 1, 0),
-        text_len=state.text_len + khat, old_proposals=state.proposals)
+        text_len=state.text_len + khat, old_proposals=state.proposals,
+        prev_token=prev_token, aux=aux_params or {})
     proposals, draft_state = pol.drafter.draft(
         draft_in, state.policy_state.drafter)
     proposals = jnp.where(frozen[:, None], state.proposals, proposals)
@@ -173,7 +183,8 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
 
 
 def initial_draft(pol: DecodePolicy, head_logits: jnp.ndarray,
-                  text_len: jnp.ndarray, block_k: int, state):
+                  text_len: jnp.ndarray, block_k: int, state, *,
+                  prev_token=None, aux_params=None):
     """Draft the FIRST block from a prefill's head logits.
 
     ``head_logits`` is (B, K, V) at the last context position — presented to
@@ -183,14 +194,22 @@ def initial_draft(pol: DecodePolicy, head_logits: jnp.ndarray,
     ``argmax(head_logits)``; source-drafting policies get to draft from
     their own state immediately instead of spending one iteration on weak
     head proposals.
+
+    ``prev_token`` is the (B,) committed token at ``text_len - 1`` (the
+    last prompt token; BOS for seq2seq) and ``aux_params`` the auxiliary
+    bundle params — both only consumed by model-backed drafters.
     """
     b = head_logits.shape[0]
+    if prev_token is None:
+        prev_token = jnp.zeros((b,), jnp.int32)
     din = DraftInputs(
         logits=head_logits[:, None, :block_k, :],
         khat=jnp.ones((b,), jnp.int32),
         slot=jnp.zeros((b,), jnp.int32),
         text_len=jnp.broadcast_to(jnp.asarray(text_len, jnp.int32), (b,)),
-        old_proposals=jnp.zeros((b, block_k), jnp.int32))
+        old_proposals=jnp.zeros((b, block_k), jnp.int32),
+        prev_token=jnp.asarray(prev_token, jnp.int32),
+        aux=aux_params or {})
     proposals, new_state = pol.drafter.draft(din, state)
     return proposals.astype(jnp.int32), new_state
 
@@ -221,7 +240,8 @@ def decode_stats(final) -> Dict:
 
 def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
                           batch: Dict, *, max_new: int, kv_chunk: int = 0,
-                          policy: Optional[DecodePolicy] = None):
+                          policy: Optional[DecodePolicy] = None,
+                          aux_params=None):
     """Prefill the caches from the prompt and produce the first proposals."""
     pol = policy_lib.resolve_policy(dec, policy)
     block_k = dec.block_k or cfg.bpd_k
@@ -238,9 +258,11 @@ def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
         moe_full_capacity=True)
     last = hidden[:, -1, :]                                 # context = full prompt
     logits = model_lib.all_head_logits(params, cfg, last)   # (B, K, V)
-    ps = pol.init_state(cfg, dec, batch, b)
+    ps = pol.init_state(cfg, dec, batch, b, aux=aux_params or {})
     proposals, dstate = initial_draft(pol, logits, prompt_len, block_k,
-                                      ps.drafter)
+                                      ps.drafter,
+                                      prev_token=prompt[:, -1],
+                                      aux_params=aux_params)
 
     buf = prompt_len + max_new + block_k
     tokens = jnp.zeros((b, buf), jnp.int32)
@@ -262,19 +284,20 @@ def _bpd_decode_impl(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict,
                      row_budget=None, *, backend: Optional[Backend] = None,
                      kv_chunk: int = 0,
                      constrain: Optional[Callable] = None,
-                     policy: Optional[DecodePolicy] = None
-                     ) -> Tuple[jnp.ndarray, Dict]:
+                     policy: Optional[DecodePolicy] = None,
+                     aux_params=None) -> Tuple[jnp.ndarray, Dict]:
     """Prefill + while_loop for the decoder-only model.
 
     ``constrain`` (set by a mesh-backed ``DecodeSession``) applies sharding
     constraints to the loop-carried state so GSPMD keeps it partitioned
-    through the whole loop.
+    through the whole loop.  ``aux_params`` are the auxiliary bundle params
+    (loop-invariant, closed over by the body like the primary params).
     """
     max_new = dec.max_new_tokens
     pol = policy_lib.resolve_policy(dec, policy)
     state, prefix = bpd_prefill_causal_lm(params, cfg, dec, batch,
                                           max_new=max_new, kv_chunk=kv_chunk,
-                                          policy=pol)
+                                          policy=pol, aux_params=aux_params)
     if constrain is not None:
         state = constrain(state)
     be = backend or causal_lm_backend(cfg, kv_chunk=kv_chunk)
@@ -285,14 +308,15 @@ def _bpd_decode_impl(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict,
 
     def body(s: BPDState):
         return bpd_iteration(params, cfg, dec, be, s,
-                             prefix_offset=prefix, max_new=budget, policy=pol)
+                             prefix_offset=prefix, max_new=budget, policy=pol,
+                             aux_params=aux_params)
 
     final = jax.lax.while_loop(cond, body, state)
     return final.tokens, decode_stats(final)
 
 
 def _session_for(params, cfg, dec, *, mesh=None, session=None, kv_chunk=0,
-                 backend=None, policy=None):
+                 backend=None, policy=None, bundles=None):
     """Resolve the DecodeSession a wrapper should run through.
 
     When ``session`` is given it takes precedence — its (possibly
@@ -314,8 +338,14 @@ def _session_for(params, cfg, dec, *, mesh=None, session=None, kv_chunk=0,
                 f"{dec}: a session's decode config is fixed at "
                 f"construction — build a new session (or call its "
                 f"methods directly)")
+        if bundles is not None:
+            raise ValueError(
+                "bundles are fixed at DecodeSession construction — build "
+                "the session with bundles= instead of passing them to the "
+                "decode wrapper")
         if policy is not None and \
-                policy_lib.resolve_policy(dec, policy) != session.policy:
+                policy_lib.resolve_policy(dec, policy).bind(
+                    session.bundles, cfg) != session.policy:
             raise ValueError(
                 f"session was built with policy "
                 f"{session.policy.name!r}, called with {policy!r}: a "
@@ -325,13 +355,13 @@ def _session_for(params, cfg, dec, *, mesh=None, session=None, kv_chunk=0,
     from repro.serving.session import DecodeSession
 
     return DecodeSession(params, cfg, dec, mesh=mesh, kv_chunk=kv_chunk,
-                         backend=backend, policy=policy)
+                         backend=backend, policy=policy, bundles=bundles)
 
 
 def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
                backend: Optional[Backend] = None, kv_chunk: int = 0,
                max_new_rows: Optional[jnp.ndarray] = None,
-               mesh=None, session=None, policy=None
+               mesh=None, session=None, policy=None, bundles=None
                ) -> Tuple[jnp.ndarray, Dict]:
     """Full blockwise parallel decode for the decoder-only model.
 
@@ -352,9 +382,14 @@ def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
     call, re-placing params and recompiling — callers decoding more than
     once should build a ``DecodeSession`` and pass ``session=`` so the
     placement and per-geometry jit cache persist across calls.
+
+    bundles: optional {name: core.bundle.ModelBundle} of auxiliary models
+    (e.g. ``{"draft": ModelBundle(draft_params, draft_cfg)}`` for the
+    ``draft_model`` policy); fixed at session construction.
     """
     sess = _session_for(params, cfg, dec, mesh=mesh, session=session,
-                        kv_chunk=kv_chunk, backend=backend, policy=policy)
+                        kv_chunk=kv_chunk, backend=backend, policy=policy,
+                        bundles=bundles)
     return sess.decode(batch, max_new_rows=max_new_rows)
 
 
@@ -366,8 +401,8 @@ def bpd_decode(params, cfg: ModelConfig, dec: DecodeConfig, batch: Dict, *,
 def _bpd_decode_seq2seq_impl(params, cfg: ModelConfig, dec: DecodeConfig,
                              batch: Dict,
                              constrain: Optional[Callable] = None,
-                             policy: Optional[DecodePolicy] = None
-                             ) -> Tuple[jnp.ndarray, Dict]:
+                             policy: Optional[DecodePolicy] = None,
+                             aux_params=None) -> Tuple[jnp.ndarray, Dict]:
     """batch: {"src": (B, Ss)}.  Decoder stream: BOS (token 0) + output."""
     max_new = dec.max_new_tokens
     pol = policy_lib.resolve_policy(dec, policy)
@@ -384,8 +419,11 @@ def _bpd_decode_seq2seq_impl(params, cfg: ModelConfig, dec: DecodeConfig,
                                                 enc_mask=enc_mask,
                                                 caches=caches)
     logits = seq2seq_lib.all_head_logits(params, cfg, hidden[:, -1, :])
-    ps = pol.init_state(cfg, dec, batch, b)
-    proposals, dstate = initial_draft(pol, logits, 1, block_k, ps.drafter)
+    ps = pol.init_state(cfg, dec, batch, b, aux=aux_params or {})
+    # the committed token at text_len - 1 is BOS (decoder position 0)
+    proposals, dstate = initial_draft(pol, logits, 1, block_k, ps.drafter,
+                                      prev_token=bos[:, 0],
+                                      aux_params=aux_params)
 
     buf = 1 + max_new + block_k
     tokens = jnp.zeros((b, buf), jnp.int32)
@@ -407,23 +445,26 @@ def _bpd_decode_seq2seq_impl(params, cfg: ModelConfig, dec: DecodeConfig,
 
     def body(s: BPDState):
         return bpd_iteration(params, cfg, dec, be, s, prefix_offset=0,
-                             max_new=max_new, policy=pol)
+                             max_new=max_new, policy=pol,
+                             aux_params=aux_params)
 
     final = jax.lax.while_loop(cond, body, state)
     return final.tokens[:, 1:], decode_stats(final)  # strip BOS
 
 
 def bpd_decode_seq2seq(params, cfg: ModelConfig, dec: DecodeConfig,
-                       batch: Dict, *, mesh=None, session=None, policy=None
-                       ) -> Tuple[jnp.ndarray, Dict]:
+                       batch: Dict, *, mesh=None, session=None, policy=None,
+                       bundles=None) -> Tuple[jnp.ndarray, Dict]:
     """batch: {"src": (B, Ss)}.  Decoder stream: BOS (token 0) + output.
 
-    ``policy`` — see ``bpd_decode``; the seq2seq path additionally supports
-    source-drafting policies (``input_copy``), whose drafter state is
-    initialized from ``batch["src"]``.
+    ``policy`` / ``bundles`` — see ``bpd_decode``; the seq2seq path
+    additionally supports source-drafting policies (``input_copy``), whose
+    drafter state is initialized from ``batch["src"]``, and the
+    ``draft_model`` policy, whose small causal draft LM runs over the
+    decoder token stream.
     """
     sess = _session_for(params, cfg, dec, mesh=mesh, session=session,
-                        policy=policy)
+                        policy=policy, bundles=bundles)
     return sess.decode_seq2seq(batch)
 
 

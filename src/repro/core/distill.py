@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import DecodeConfig, ModelConfig
-from repro.core.decode import greedy_decode
+from repro.core.decode import greedy_decode, greedy_decode_seq2seq
 
 
 def distill_lm_batches(teacher_params, cfg: ModelConfig, batches: Iterable[Dict],
@@ -35,4 +35,34 @@ def distill_lm_batches(teacher_params, cfg: ModelConfig, batches: Iterable[Dict]
         s = batch["tokens"].shape[1]
         new = np.asarray(toks[:, :s])
         out.append(dict(batch, tokens=jnp.asarray(new)))
+    return out
+
+
+def distill_seq2seq_to_causal_batches(teacher_params, cfg: ModelConfig,
+                                      src_batches: Iterable[np.ndarray], *,
+                                      max_new: int, bos_id: int = 0
+                                      ) -> List[Dict]:
+    """Draft-student training data from a seq2seq teacher (paper §6.2 reuse).
+
+    Greedy teacher decodes of each ``(B, Ss)`` source batch become
+    BOS-prefixed *causal LM* token streams — the training set for a small
+    decoder-only draft model (``core.draft.DraftModelDrafter``).  The draft
+    model never sees the source; it learns the teacher's output
+    distribution directly, which is exactly the "consistent mode breaking"
+    property the paper credits distillation with — and the reason a tiny
+    student can propose blocks the big model then verifies losslessly.
+
+    Output batches: {"tokens": (B, 1 + max_new)} with ``tokens[:, 0] ==
+    bos_id``, matching the decoder stream the drafter replays at decode
+    time (BOS at position 0).
+    """
+    dec = DecodeConfig(max_new_tokens=max_new, block_k=1, eos_id=-1)
+    fn = jax.jit(
+        lambda b: greedy_decode_seq2seq(teacher_params, cfg, dec, b)[0])
+    out = []
+    for src in src_batches:
+        toks = np.asarray(fn({"src": jnp.asarray(src)}))[:, :max_new]
+        bos = np.full((toks.shape[0], 1), bos_id, np.int32)
+        stream = np.concatenate([bos, toks.astype(np.int32)], axis=1)
+        out.append({"tokens": jnp.asarray(stream)})
     return out

@@ -75,6 +75,14 @@ class DraftInputs(NamedTuple):
     the current block — reusing it keeps drafting free (no extra model
     calls), exactly like the paper's combined scoring/proposal
     formulation (§4).
+
+    ``prev_token`` / ``aux`` are the bundle-aware model-call seam: a
+    drafter backed by its own model (``core.draft.DraftModelDrafter``)
+    reads its parameters from ``aux`` (the session's auxiliary
+    ``ModelBundle`` params, keyed by bundle name) and uses ``prev_token``
+    — the committed token at position ``text_len - 1`` — to keep its own
+    loop-carried cache in sync with the verified stream.  Drafters that
+    only read the verify forward ignore both.
     """
 
     logits: jnp.ndarray       # (B, k, K, V) all-head logits at every slot
@@ -82,6 +90,8 @@ class DraftInputs(NamedTuple):
     slot: jnp.ndarray         # (B,) accepted slot index = max(k̂ - 1, 0)
     text_len: jnp.ndarray     # (B,) text length AFTER accepting this block
     old_proposals: jnp.ndarray  # (B, k) the block that was just verified
+    prev_token: Any = ()      # (B,) committed token at text_len - 1
+    aux: Any = ()             # {bundle name: params} for model-backed drafters
 
 
 def _gather_slot(x: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
@@ -230,14 +240,28 @@ class Drafter:
     """Produces the next block of proposals from the verify forward.
 
     ``init_state`` sees the decode entry point's inputs (``batch`` — e.g.
-    the source sentence for seq2seq; ``None`` in the serving engine, whose
-    admission path is prompt-only) and must return a pytree of
+    the source sentence for seq2seq, or the padded prompt tokens in the
+    serving engine's admission path) and must return a pytree of
     batch-leading ``(b, …)`` arrays, or ``()`` for stateless drafters.
+    ``aux`` carries the auxiliary ``ModelBundle`` params when the caller
+    has them (decode prefill, engine admission); paths that cannot supply
+    params (engine init/evict, ``jax.eval_shape`` struct builders) pass
+    ``()`` — model-backed drafters must produce identically-shaped state
+    either way.
+
+    ``bind`` attaches the *static* side of the session's auxiliary bundles
+    (cfg / kv_chunk / backend factory) to the drafter before any tracing;
+    the default is a no-op for drafters that need no second model.
     """
 
     def init_state(self, cfg, dec: DecodeConfig, batch: Optional[Dict],
-                   b: int) -> Any:
+                   b: int, aux: Any = ()) -> Any:
         return ()
+
+    def bind(self, bundles: Dict, cfg) -> "Drafter":
+        """bundles: {name: core.bundle.ModelBundle}; cfg: the PRIMARY model
+        config (for cross-model compatibility checks)."""
+        return self
 
     def draft(self, inputs: DraftInputs, state: Any):
         """-> (proposals (B, k) int32 with slot 0 = verified token, state)."""
@@ -271,7 +295,7 @@ class InputCopyDrafter(Drafter):
 
     offset: int = 0
 
-    def init_state(self, cfg, dec, batch, b):
+    def init_state(self, cfg, dec, batch, b, aux=()):
         if batch is None or "src" not in batch:
             raise ValueError(
                 "InputCopyDrafter drafts from batch['src'] and is only "
@@ -351,10 +375,21 @@ class DecodePolicy:
     name: str = "custom"
 
     def init_state(self, cfg, dec: DecodeConfig, batch: Optional[Dict],
-                   b: int) -> PolicyState:
+                   b: int, aux: Any = ()) -> PolicyState:
         return PolicyState(
-            drafter=self.drafter.init_state(cfg, dec, batch, b),
+            drafter=self.drafter.init_state(cfg, dec, batch, b, aux=aux),
             schedule=self.schedule.init_state(b))
+
+    def bind(self, bundles: Dict, cfg) -> "DecodePolicy":
+        """Attach the session's auxiliary ``ModelBundle``s (static side:
+        cfg / kv_chunk / backend factory) to the drafter.  A no-op for
+        single-model policies; model-backed drafters validate and absorb
+        their bundle here — BEFORE any tracing — so a missing or
+        incompatible draft model fails at session construction."""
+        drafter = self.drafter.bind(bundles or {}, cfg)
+        if drafter is self.drafter:
+            return self
+        return dataclasses.replace(self, drafter=drafter)
 
 
 # name -> builder(dec) -> DecodePolicy.  The legacy criterion strings are
@@ -414,3 +449,8 @@ register_policy("input_copy", lambda dec: DecodePolicy(
 register_policy("topk_tree", lambda dec: DecodePolicy(
     TopKTreeDrafter(fanout=max(dec.top_k, 2)), ExactAcceptor(),
     _schedule_for(dec), name="topk_tree"))
+
+# the model-backed speculative drafter lives in core.draft (it pulls in the
+# model stack); importing it here registers the "draft_model" policy so the
+# registry is complete whenever policies are resolvable at all
+from repro.core import draft as _draft  # noqa: E402,F401  (registration)

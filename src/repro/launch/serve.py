@@ -3,12 +3,21 @@ blockwise parallel decoding.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
         --ckpt-dir /tmp/ckpt --batch 4 --max-new 32 \
-        [--criterion topk --top-k 2] [--policy topk_tree] [--sched sjf]
+        [--criterion topk --top-k 2] [--policy topk_tree] [--sched sjf] \
+        [--policy draft_model --draft-arch granite-3-8b \
+         --draft-ckpt /tmp/draft-ckpt]
 
 ``--policy`` selects a registered decode policy (drafter × acceptor ×
 block schedule, see README "Decode policies"); unset, the legacy
 ``--criterion`` alias applies.  ``--sched`` picks the engine's admission
 order (fcfs/sjf).
+
+``--policy draft_model`` serves with the speculative draft-model drafter:
+a second (small) model — the ``--draft-arch`` smoke config, restored from
+``--draft-ckpt`` when given — proposes each block autoregressively
+through an auxiliary ``ModelBundle``, and the primary model verifies
+losslessly.  Both modes (static batch and ``--engine``) thread the bundle
+through the same ``DecodeSession``.
 
 Runs the prefill + serve_step loop (the same entry points the multi-pod
 dry-run lowers) on the host devices with the reduced config.
@@ -55,6 +64,14 @@ def main():
                          "empty = the --criterion legacy alias")
     ap.add_argument("--top-k", type=int, default=2)
     ap.add_argument("--epsilon", type=float, default=2.0)
+    ap.add_argument("--draft-arch", default=None,
+                    help="arch of the speculative draft model (smoke "
+                         "config; --policy draft_model); defaults to "
+                         "--arch — the draft vocab must match the primary")
+    ap.add_argument("--draft-ckpt", default=None,
+                    help="checkpoint dir for the draft model's params "
+                         "(unset: randomly initialized — lossless but "
+                         "slow, demo only)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", action="store_true",
                     help="serve through the continuous-batching engine "
@@ -95,14 +112,18 @@ def main():
         mesh = make_host_mesh(args.mesh_data, args.mesh_model, require=True)
         print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices")
 
+    bundles = draft_bundle(cfg, args)
+
     if args.engine:
-        serve_engine(params, cfg, dec, args, task, mesh=mesh)
+        serve_engine(params, cfg, dec, args, task, mesh=mesh,
+                     bundles=bundles)
         return
 
     # static batch through the same session layer the engine uses —
     # jitted once (with explicit shardings when a mesh is given)
     from repro.serving import DecodeSession
-    sess = DecodeSession(params, cfg, dec, mesh=mesh, jit=True)
+    sess = DecodeSession(params, cfg, dec, mesh=mesh, jit=True,
+                         bundles=bundles)
     sess.decode(batch)  # compile
     t0 = time.time()
     toks, stats = sess.decode(batch)
@@ -121,7 +142,29 @@ def main():
         print(f"    row {r}: {out}")
 
 
-def serve_engine(params, cfg, dec, args, task, *, mesh=None):
+def draft_bundle(cfg, args):
+    """Build the auxiliary draft ``ModelBundle`` for --policy draft_model
+    (None otherwise): the --draft-arch smoke config (default: the primary
+    arch), restored from --draft-ckpt when given."""
+    if args.policy != "draft_model":
+        return None
+    from repro.core.bundle import ModelBundle
+
+    dcfg = get_config(args.draft_arch or args.arch,
+                      smoke=True).replace(dtype="float32", bpd_enabled=False)
+    dparams = M.init(jax.random.PRNGKey(args.seed + 7), dcfg)
+    if args.draft_ckpt and latest_step(args.draft_ckpt) is not None:
+        dparams, extra = restore(args.draft_ckpt, dparams)
+        print(f"[serve] draft model: restored step "
+              f"{latest_step(args.draft_ckpt)} ({extra.get('arch')})")
+    else:
+        print(f"[serve] draft model: {dcfg.name} (randomly initialized — "
+              f"lossless, but expect k̂ ≈ 1; pass --draft-ckpt for a real "
+              f"draft)")
+    return {"draft": ModelBundle(dparams, dcfg)}
+
+
+def serve_engine(params, cfg, dec, args, task, *, mesh=None, bundles=None):
     """Mixed-length request traffic through the continuous-batching engine."""
     from repro.serving import (ContinuousBatchingEngine, EngineConfig,
                                Request, Scheduler, aggregate_stats)
@@ -129,7 +172,8 @@ def serve_engine(params, cfg, dec, args, task, *, mesh=None):
     ecfg = EngineConfig(num_slots=args.batch,
                         max_prompt_len=args.prompt_len,
                         max_new_cap=args.max_new)
-    engine = ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh)
+    engine = ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh,
+                                      bundles=bundles)
     sched = Scheduler(engine, policy=args.sched)
 
     rng = np.random.default_rng(args.seed + 2)

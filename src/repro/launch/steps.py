@@ -115,7 +115,11 @@ def make_prefill_step(cfg: ModelConfig, dec: DecodeConfig,
 
 
 def make_serve_step(cfg: ModelConfig, dec: DecodeConfig, *, seq_len: int,
-                    max_new: int = 4096, kv_chunk: int = 0) -> Callable:
+                    max_new: int = 4096, kv_chunk: int = 0,
+                    aux_params=None) -> Callable:
+    """``aux_params`` ({bundle name: params}) is closed over for policies
+    whose drafter runs an auxiliary model (see core.bundle); the default
+    serve path is single-model."""
     prefix = cfg.num_meta_tokens + (
         cfg.num_patch_tokens if cfg.modality == "vision_text" else 0)
     backend = decode_lib.causal_lm_backend(cfg, kv_chunk=kv_chunk)
@@ -124,7 +128,8 @@ def make_serve_step(cfg: ModelConfig, dec: DecodeConfig, *, seq_len: int,
     def serve_step(params, state: decode_lib.BPDState) -> decode_lib.BPDState:
         return decode_lib.bpd_iteration(
             params, cfg, dec, backend, state,
-            prefix_offset=prefix, max_new=max_new, policy=pol)
+            prefix_offset=prefix, max_new=max_new, policy=pol,
+            aux_params=aux_params)
 
     return serve_step
 

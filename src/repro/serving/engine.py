@@ -62,7 +62,8 @@ class ContinuousBatchingEngine:
 
     def __init__(self, params, cfg: ModelConfig, dec: DecodeConfig,
                  ecfg: EngineConfig, *, mesh=None,
-                 session: Optional[DecodeSession] = None, policy=None):
+                 session: Optional[DecodeSession] = None, policy=None,
+                 bundles=None):
         if cfg.block_type != "attn":
             raise NotImplementedError(
                 f"serving engine requires an attention-cache family "
@@ -76,7 +77,14 @@ class ContinuousBatchingEngine:
             raise NotImplementedError("serving engine is decoder-only")
 
         self.session = session if session is not None else DecodeSession(
-            params, cfg, dec, mesh=mesh, policy=policy)
+            params, cfg, dec, mesh=mesh, policy=policy, bundles=bundles)
+        for name, b in self.session.bundles.items():
+            if b.cfg.block_type != "attn":
+                raise NotImplementedError(
+                    f"auxiliary bundle {name!r} has block_type="
+                    f"{b.cfg.block_type!r}: the engine's padded admission "
+                    f"prefill is only sound for attention caches (same "
+                    f"argument as the primary model)")
         ecfg.validate(dec=self.session.dec, mesh=self.session.mesh)
         self.policy = self.session.policy
 
@@ -107,6 +115,12 @@ class ContinuousBatchingEngine:
         """Mesh-placed parameters (owned by the DecodeSession)."""
         return self.session.params
 
+    @property
+    def aux_params(self):
+        """Auxiliary bundle params (e.g. the draft model's), mesh-placed
+        per bundle by the DecodeSession."""
+        return self.session.aux_params
+
     # -- host-side API -------------------------------------------------------
 
     def free_slots(self) -> List[int]:
@@ -130,7 +144,7 @@ class ContinuousBatchingEngine:
         prompt[:p] = req.prompt
         max_new = int(np.clip(req.max_new, 1, self.ecfg.max_new_cap))
         self.state = self._fns.admit(
-            self.params, self.state, jnp.asarray(slot, I32),
+            self.params, self.aux_params, self.state, jnp.asarray(slot, I32),
             jnp.asarray(prompt), jnp.asarray(p, I32),
             jnp.asarray(max_new, I32))
         self._status[slot] = 1          # known host-side: no readback needed
@@ -147,7 +161,8 @@ class ContinuousBatchingEngine:
     def step(self, *, now: Optional[float] = None) -> List[FinishedRequest]:
         """One BPD iteration over all active slots, then harvest+evict."""
         self.num_steps += 1
-        self.state, status = self._fns.step(self.params, self.state)
+        self.state, status = self._fns.step(self.params, self.aux_params,
+                                            self.state)
         # the ONE per-step device->host round-trip: a fused (S,) int8 array
         # carrying both the active and the finished bits (the harvest
         # decision), instead of pulling state.active and state.finished

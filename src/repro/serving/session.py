@@ -63,43 +63,74 @@ def _geometry(batch: Dict) -> tuple:
 
 
 class ServingFns(NamedTuple):
-    """The engine's device functions, compiled once per EngineConfig."""
+    """The engine's device functions, compiled once per EngineConfig.
+
+    ``aux`` is the session's {bundle name: params} dict of auxiliary
+    models (empty for single-model sessions); it rides along wherever the
+    decode policy may run a model of its own.
+    """
 
     init: Callable      # () -> SlotBatch (mesh-placed when sharded)
-    admit: Callable     # (params, state, slot, prompt, plen, max_new) -> state
-    step: Callable      # (params, state) -> (state, status (S,) int8)
+    admit: Callable     # (params, aux, state, slot, prompt, plen, max_new) -> state
+    step: Callable      # (params, aux, state) -> (state, status (S,) int8)
     evict: Callable     # (state, mask) -> state
 
 
 class DecodeSession:
-    """Sharding-aware owner of params + jitted decode entry points.
+    """Sharding-aware owner of the model bundles + jitted decode entry
+    points.
 
     ``policy`` fixes the decode policy (drafter × acceptor × block
     schedule) for the session's lifetime, exactly like ``dec``: every
-    entry point is jitted once per (policy, geometry), and the policy's
-    loop-carried state is part of the sharded decode state
-    (``sharding.policy.state_specs`` / ``slot_specs`` treat its
-    batch-leading leaves like any other per-row array).
+    entry point is jitted once per (bundles, policy, geometry) — bundles
+    are fixed at construction, so the per-session jit cache keys on
+    (policy, geometry) — and the policy's loop-carried state is part of
+    the sharded decode state (``sharding.policy.state_specs`` /
+    ``slot_specs`` treat its batch-leading leaves like any other per-row
+    array, with model-backed drafter caches spec'd under their own
+    bundle's config).
+
+    ``bundles`` ({name: core.bundle.ModelBundle}) are the session's
+    auxiliary models — e.g. ``{"draft": ModelBundle(draft_params,
+    draft_cfg)}`` for the ``draft_model`` policy.  Each bundle's params
+    are device_put with its own ``param_shardings`` and threaded into
+    every jitted entry point as an explicit argument, so they shard and
+    cache-key exactly like the primary parameters; the static half of
+    each bundle (cfg / kv_chunk / backend factory) is bound into the
+    policy up front (``DecodePolicy.bind``), so incompatible bundles fail
+    at construction, not at trace time.
     """
 
     def __init__(self, params, cfg: ModelConfig, dec: DecodeConfig, *,
                  mesh=None, kv_chunk: int = 0, backend=None,
                  jit: Optional[bool] = None, donate: Optional[bool] = None,
-                 policy=None):
+                 policy=None, bundles=None):
         self.cfg = cfg
         self.dec = dec
-        self.policy = policy_lib.resolve_policy(dec, policy)
+        self.bundles = dict(bundles or {})
+        self.policy = policy_lib.resolve_policy(dec, policy).bind(
+            self.bundles, cfg)
         self.mesh = mesh
         self.kv_chunk = kv_chunk
         self.backend = backend
         self.jit = (mesh is not None) if jit is None else bool(jit)
         self._donate = donate
+        # a model-backed drafter exposes its bound model config as .cfg —
+        # the sharding policy specs its loop-carried cache under it
+        self.draft_cfg = getattr(self.policy.drafter, "cfg", None)
         if mesh is not None:
             self.param_shardings = sharding_policy.param_shardings(params, mesh)
             self.params = jax.device_put(params, self.param_shardings)
+            self.aux_shardings = sharding_policy.bundle_param_shardings(
+                self.bundles, mesh)
+            self.aux_params = {n: jax.device_put(b.params,
+                                                 self.aux_shardings[n])
+                               for n, b in self.bundles.items()}
         else:
             self.param_shardings = None
             self.params = params
+            self.aux_shardings = {}
+            self.aux_params = {n: b.params for n, b in self.bundles.items()}
         self._fns: Dict[Any, Callable] = {}
 
     # -- placement helpers ---------------------------------------------------
@@ -138,8 +169,11 @@ class DecodeSession:
             return None
         cfg, mesh = self.cfg, self.mesh
 
+        draft_cfg = self.draft_cfg
+
         def constrain(state):
-            specs = sharding_policy.state_specs(cfg, state, mesh)
+            specs = sharding_policy.state_specs(cfg, state, mesh,
+                                                draft_cfg=draft_cfg)
             return jax.lax.with_sharding_constraint(
                 state, sharding_policy.named(mesh, specs))
 
@@ -166,16 +200,21 @@ class DecodeSession:
         return fn
 
     def _jit_entry(self, fn, batch: Dict, extra_in=(), extra_structs=()):
-        """jit one run-to-completion entry point with explicit shardings."""
+        """jit one run-to-completion entry point with explicit shardings.
+
+        Every entry point takes ``(params, aux, batch, *extra)`` — ``aux``
+        is the {bundle name: params} dict of auxiliary models, sharded per
+        bundle (empty dict for single-model sessions)."""
         if self.mesh is None:
             return jax.jit(fn)
         mesh = self.mesh
         b = next(iter(batch.values())).shape[0]
-        in_sh = (self.param_shardings,
+        in_sh = (self.param_shardings, self.aux_shardings,
                  sharding_policy.named(
                      mesh, sharding_policy.batch_specs(mesh, batch)),
                  *extra_in)
         out_sh = self._out_shardings(fn, b, _structs(self.params),
+                                     _structs(self.aux_params),
                                      _structs(batch), *extra_structs)
         return self._with_mesh(
             jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh))
@@ -188,7 +227,8 @@ class DecodeSession:
         if not self.jit:
             return decode_lib._bpd_decode_impl(
                 self.params, cfg, dec, batch, max_new_rows,
-                backend=self.backend, kv_chunk=self.kv_chunk, policy=pol)
+                backend=self.backend, kv_chunk=self.kv_chunk, policy=pol,
+                aux_params=self.aux_params)
 
         b = batch["tokens"].shape[0]
         budget = (jnp.full((b,), dec.max_new_tokens, I32)
@@ -198,10 +238,11 @@ class DecodeSession:
             backend, kv_chunk = self.backend, self.kv_chunk
             constrain = self._constrain()
 
-            def fn(params, batch, budget):
+            def fn(params, aux, batch, budget):
                 return decode_lib._bpd_decode_impl(
                     params, cfg, dec, batch, budget, backend=backend,
-                    kv_chunk=kv_chunk, constrain=constrain, policy=pol)
+                    kv_chunk=kv_chunk, constrain=constrain, policy=pol,
+                    aux_params=aux)
 
             extra_in, extra_structs = (), (jax.ShapeDtypeStruct((b,), I32),)
             if self.mesh is not None:
@@ -210,7 +251,7 @@ class DecodeSession:
             return self._jit_entry(fn, batch, extra_in, extra_structs)
 
         fn = self._get(("bpd", pol.name) + _geometry(batch), build)
-        return fn(self.params, batch, budget)
+        return fn(self.params, self.aux_params, batch, budget)
 
     def greedy(self, batch: Dict):
         """Greedy baseline (p_1 only).  See core.decode.greedy_decode."""
@@ -223,7 +264,8 @@ class DecodeSession:
             kv_chunk = self.kv_chunk
             constrain = self._constrain()
 
-            def fn(params, batch):
+            def fn(params, aux, batch):
+                del aux  # greedy never drafts — uniform signature only
                 return decode_lib._greedy_decode_impl(
                     params, cfg, dec, batch, kv_chunk=kv_chunk,
                     constrain=constrain)
@@ -231,26 +273,28 @@ class DecodeSession:
             return self._jit_entry(fn, batch)
 
         fn = self._get(("greedy",) + _geometry(batch), build)
-        return fn(self.params, batch)
+        return fn(self.params, self.aux_params, batch)
 
     def decode_seq2seq(self, batch: Dict):
         """Encode once, BPD the decoder.  See core.decode.bpd_decode_seq2seq."""
         cfg, dec, pol = self.cfg, self.dec, self.policy
         if not self.jit:
             return decode_lib._bpd_decode_seq2seq_impl(
-                self.params, cfg, dec, batch, policy=pol)
+                self.params, cfg, dec, batch, policy=pol,
+                aux_params=self.aux_params)
 
         def build():
             constrain = self._constrain()
 
-            def fn(params, batch):
+            def fn(params, aux, batch):
                 return decode_lib._bpd_decode_seq2seq_impl(
-                    params, cfg, dec, batch, constrain=constrain, policy=pol)
+                    params, cfg, dec, batch, constrain=constrain, policy=pol,
+                    aux_params=aux)
 
             return self._jit_entry(fn, batch)
 
         fn = self._get(("s2s", pol.name) + _geometry(batch), build)
-        return fn(self.params, batch)
+        return fn(self.params, self.aux_params, batch)
 
     # -- serving (continuous batching) ---------------------------------------
 
@@ -272,6 +316,16 @@ class DecodeSession:
             cfg, kv_chunk=self.kv_chunk)
         s = ecfg.num_slots
 
+        def slots_batch(n: int) -> Dict:
+            """Pseudo decode-entry batch for policy-state builders: the
+            engine admits padded prompts, so drafters see a zeroed
+            ``tokens`` batch of the admission geometry — this keeps their
+            state SHAPES identical across init (n = num_slots, no params),
+            admit (n = 1, prefilled for real) and evict (reset rows).
+            Drafters that need decode-entry inputs the engine cannot
+            provide (``batch["src"]``) still reject here, at build time."""
+            return {"tokens": jnp.zeros((n, ecfg.max_prompt_len), I32)}
+
         def init_slots() -> SlotBatch:
             zeros = lambda: jnp.zeros((s,), I32)  # noqa: E731
             return SlotBatch(
@@ -285,19 +339,18 @@ class DecodeSession:
                 generated=zeros(),
                 max_new=zeros(),
                 invocations=zeros(),
-                # prompt-only admission: drafters that need decode-entry
-                # inputs (batch["src"]) reject the engine here, at build time
-                policy_state=pol.init_state(cfg, dec, None, s),
+                policy_state=pol.init_state(cfg, dec, slots_batch(s), s),
             )
 
         slot_sh = cache_sh = None
         if mesh is not None:
             struct = jax.eval_shape(init_slots)
             slot_sh = sharding_policy.named(
-                mesh, sharding_policy.slot_specs(cfg, struct, mesh))
+                mesh, sharding_policy.slot_specs(cfg, struct, mesh,
+                                                 draft_cfg=self.draft_cfg))
             cache_sh = slot_sh.caches
 
-        def admit(params, state: SlotBatch, slot, prompt, prompt_len,
+        def admit(params, aux, state: SlotBatch, slot, prompt, prompt_len,
                   max_new) -> SlotBatch:
             """Prefill one padded prompt into row ``slot``.
 
@@ -319,9 +372,14 @@ class DecodeSession:
             # per-slot policy state resets on admission — a fresh request
             # must not inherit the previous occupant's drafter/schedule
             # state — and the policy's drafter proposes the first block
-            row_ps = pol.init_state(cfg, dec, None, 1)
+            # (a model-backed drafter prefills its own cache on the padded
+            # prompt here, with its params from ``aux``)
+            row_ps = pol.init_state(cfg, dec, {"tokens": prompt[None]}, 1,
+                                    aux=aux)
+            last_tok = jnp.take(prompt, jnp.maximum(prompt_len - 1, 0))
             row_props, row_ds = decode_lib.initial_draft(
-                pol, logits[None], prompt_len, block_k, row_ps.drafter)
+                pol, logits[None], prompt_len, block_k, row_ps.drafter,
+                prev_token=last_tok[None], aux_params=aux)
             proposals = row_props[0]
             row_ps = row_ps._replace(drafter=row_ds)
 
@@ -346,7 +404,7 @@ class DecodeSession:
                 policy_state=policy_state,
             )
 
-        def step(params, state: SlotBatch):
+        def step(params, aux, state: SlotBatch):
             bst = decode_lib.BPDState(
                 tokens=state.tokens, text_len=state.text_len,
                 proposals=state.proposals, caches=state.caches,
@@ -354,7 +412,8 @@ class DecodeSession:
                 generated=state.generated, policy_state=state.policy_state)
             out = decode_lib.bpd_iteration(
                 params, cfg, dec, backend, bst, prefix_offset=prefix,
-                max_new=state.max_new, active=state.active, policy=pol)
+                max_new=state.max_new, active=state.active, policy=pol,
+                aux_params=aux)
             stepped = state.active & ~state.finished
             new_state = state._replace(
                 tokens=out.tokens, text_len=out.text_len,
@@ -372,7 +431,9 @@ class DecodeSession:
         def evict(state: SlotBatch, mask) -> SlotBatch:
             # evicted slots also drop their policy state, so a paused slot
             # can never leak schedule/drafter history into a later request
-            fresh = pol.init_state(cfg, dec, None, s)
+            # (paramless init: model-backed drafters reset to empty caches
+            # of the same admission geometry — admit rebuilds them anyway)
+            fresh = pol.init_state(cfg, dec, slots_batch(s), s)
             policy_state = jax.tree_util.tree_map(
                 lambda full, init: jnp.where(
                     mask.reshape((-1,) + (1,) * (init.ndim - 1)), init, full),
@@ -390,16 +451,17 @@ class DecodeSession:
 
         rep = NamedSharding(mesh, P())
         mask_sh = NamedSharding(mesh, P(sharding_policy.batch_axes(mesh, s)))
-        state_dn = (1,) if self.donate else ()
+        aux_sh = self.aux_shardings
+        state_dn = (2,) if self.donate else ()  # state follows (params, aux)
         return ServingFns(
             init=self._with_mesh(jax.jit(init_slots, out_shardings=slot_sh)),
             admit=self._with_mesh(jax.jit(
                 admit,
-                in_shardings=(self.param_shardings, slot_sh, rep, rep, rep,
-                              rep),
+                in_shardings=(self.param_shardings, aux_sh, slot_sh, rep,
+                              rep, rep, rep),
                 out_shardings=slot_sh, donate_argnums=state_dn)),
             step=self._with_mesh(jax.jit(
-                step, in_shardings=(self.param_shardings, slot_sh),
+                step, in_shardings=(self.param_shardings, aux_sh, slot_sh),
                 out_shardings=(slot_sh, rep), donate_argnums=state_dn)),
             evict=self._with_mesh(jax.jit(
                 evict, in_shardings=(slot_sh, mask_sh),

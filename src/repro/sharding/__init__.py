@@ -1,6 +1,7 @@
 from repro.sharding.policy import (
     batch_axes,
     batch_specs,
+    bundle_param_shardings,
     cache_specs,
     data_axis_size,
     data_spec,
@@ -14,6 +15,7 @@ from repro.sharding.policy import (
 __all__ = [
     "batch_axes",
     "batch_specs",
+    "bundle_param_shardings",
     "cache_specs",
     "data_axis_size",
     "data_spec",

@@ -117,6 +117,17 @@ def param_shardings(params: Pytree, mesh: Mesh) -> Pytree:
                                   param_specs(params, mesh))
 
 
+def bundle_param_shardings(bundles: dict, mesh: Mesh) -> dict:
+    """Per-bundle parameter shardings: {name: NamedSharding pytree} for a
+    ``{name: core.bundle.ModelBundle}`` mapping — what a ``DecodeSession``
+    device_puts each auxiliary bundle with.  Every bundle's params go
+    through the same path-rule table, so a draft model's attention/MLP
+    weights shard on the ``model`` axis exactly like the primary model's
+    (dims that don't divide fall back to replicated per leaf)."""
+    return {name: param_shardings(b.params, mesh)
+            for name, b in bundles.items()}
+
+
 # ---------------------------------------------------------------------------
 # Batch / activation / cache specs
 # ---------------------------------------------------------------------------
@@ -192,7 +203,8 @@ def cache_specs(cfg: ModelConfig, caches: Pytree, mesh: Mesh,
 
 
 def state_specs(cfg: ModelConfig, state: Any, mesh: Mesh, *,
-                batch_size: Optional[int] = None) -> Any:
+                batch_size: Optional[int] = None,
+                draft_cfg: Optional[ModelConfig] = None) -> Any:
     """PartitionSpec pytree for a batch-leading decode loop state.
 
     ``state`` is any NamedTuple whose arrays lead with the batch dimension
@@ -209,6 +221,13 @@ def state_specs(cfg: ModelConfig, state: Any, mesh: Mesh, *,
     ``InputCopyDrafter``'s source batch or an ``AdaptiveSchedule``'s
     per-row cap shard over the data axes with the rest of the decode
     state.
+
+    ``draft_cfg`` (the bound drafter's own model config — a
+    ``DecodeSession`` reads it off ``policy.drafter.cfg``) upgrades
+    model-backed drafter state: a drafter state dict carrying a
+    ``"caches"`` cache pytree (the ``draft_model`` policy's loop-carried
+    draft KV cache) gets the full ``cache_specs`` treatment under the
+    DRAFT model's config instead of the generic batch-leading rule.
     """
     b = batch_size if batch_size is not None else state.tokens.shape[0]
     ax = batch_axes(mesh, b)
@@ -218,22 +237,38 @@ def state_specs(cfg: ModelConfig, state: Any, mesh: Mesh, *,
             return P(*([ax] + [None] * (x.ndim - 1)))
         return P()
 
+    def policy_specs(ps):
+        dstate = ps.drafter
+        if (draft_cfg is not None and isinstance(dstate, dict)
+                and "caches" in dstate):
+            drafter = {k: cache_specs(draft_cfg, v, mesh, b) if k == "caches"
+                       else jax.tree_util.tree_map(leaf, v)
+                       for k, v in dstate.items()}
+        else:
+            drafter = jax.tree_util.tree_map(leaf, dstate)
+        return type(ps)(drafter=drafter,
+                        schedule=jax.tree_util.tree_map(leaf, ps.schedule))
+
     fields = {}
     for name, val in state._asdict().items():
         if name == "caches" and val is not None:
             fields[name] = cache_specs(cfg, val, mesh, b)
+        elif name == "policy_state" and hasattr(val, "drafter"):
+            fields[name] = policy_specs(val)
         else:
             fields[name] = jax.tree_util.tree_map(leaf, val)
     return type(state)(**fields)
 
 
-def slot_specs(cfg: ModelConfig, slots: Any, mesh: Mesh) -> Any:
+def slot_specs(cfg: ModelConfig, slots: Any, mesh: Mesh, *,
+               draft_cfg: Optional[ModelConfig] = None) -> Any:
     """Specs for the serving engine's ``SlotBatch`` (slot dim == batch dim).
 
     Identical derivation to ``state_specs`` — the slot batch IS the decode
     batch; admission/eviction scatters stay local to the owning data shard.
     """
-    return state_specs(cfg, slots, mesh, batch_size=slots.tokens.shape[0])
+    return state_specs(cfg, slots, mesh, batch_size=slots.tokens.shape[0],
+                       draft_cfg=draft_cfg)
 
 
 def data_axis_size(mesh: Mesh) -> int:

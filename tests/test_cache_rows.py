@@ -1,0 +1,105 @@
+"""Slot-recycling cache primitives on the recurrent families.
+
+``cache.reset_rows`` / ``cache.scatter_row`` were only exercised through
+the serving engine, which is gated to attention caches — so the rwkv6 /
+mamba branches (zeroed recurrent state on eviction, row-scatter on
+admission) had no direct coverage.  These tests pin their semantics on
+the real per-layer cache dicts built by ``blocks.block_cache_init``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_hymba, tiny_rwkv
+from repro.models import cache as cache_lib
+from repro.models.blocks import block_cache_init
+
+
+def _randomize(cache, seed=0):
+    """Fill every leaf with non-trivial values (recurrent state of a
+    mid-flight request)."""
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    rng = np.random.default_rng(seed)
+    out = []
+    for leaf in leaves:
+        vals = rng.standard_normal(leaf.shape)
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            vals = rng.integers(0, 7, leaf.shape)
+        out.append(jnp.asarray(vals, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _family_cache(family: str, batch: int):
+    cfg = {"rwkv6": tiny_rwkv, "hymba": tiny_hymba}[family]()
+    cache = block_cache_init(cfg, 0, batch, context_len=32, block_k=4,
+                             dtype=jnp.float32)
+    return _randomize(cache)
+
+
+@pytest.mark.parametrize("family,key", [("rwkv6", "tm"), ("hymba", "mamba")])
+def test_reset_rows_zeroes_recurrent_state(family, key):
+    cache = _family_cache(family, batch=4)
+    mask = jnp.asarray([True, False, True, False])
+    out = cache_lib.reset_rows(cache, mask)
+
+    for name, val in out[key].items():
+        ref = np.asarray(cache[key][name])
+        got = np.asarray(val)
+        # evicted rows: recurrent state fully zeroed (a padded re-prefill
+        # cannot overwrite it, unlike KV slots)
+        assert np.all(got[mask] == 0), f"{key}/{name} not zeroed"
+        # surviving rows: bit-identical
+        np.testing.assert_array_equal(got[~np.asarray(mask)], ref[[1, 3]])
+
+
+def test_reset_rows_hymba_invalidates_kv_and_zeroes_mamba():
+    """The hybrid family carries BOTH cache kinds in one dict: eviction
+    must invalidate the attention rows (pos = -1, values untouched) and
+    zero the mamba rows in the same call."""
+    cache = _family_cache("hymba", batch=3)
+    mask = jnp.asarray([False, True, False])
+    out = cache_lib.reset_rows(cache, mask)
+    pos = np.asarray(out["attn"]["pos"])
+    assert np.all(pos[1] == -1)
+    np.testing.assert_array_equal(pos[[0, 2]],
+                                  np.asarray(cache["attn"]["pos"])[[0, 2]])
+    # K/V values are deliberately left in place (unreachable via pos = -1)
+    np.testing.assert_array_equal(np.asarray(out["attn"]["k"]),
+                                  np.asarray(cache["attn"]["k"]))
+    assert np.all(np.asarray(out["mamba"]["h"])[1] == 0)
+    assert np.all(np.asarray(out["mamba"]["conv"])[1] == 0)
+
+
+@pytest.mark.parametrize("family", ["rwkv6", "hymba"])
+def test_scatter_row_inserts_batch1_recurrent_cache(family):
+    cache = _family_cache(family, batch=4)
+    row = _randomize(jax.tree_util.tree_map(lambda x: x[:1], cache), seed=99)
+    slot = jnp.asarray(2, jnp.int32)  # traced-compatible scalar
+    out = jax.jit(lambda c, r: cache_lib.scatter_row(c, r, slot))(cache, row)
+
+    def check(full_new, full_old, row_val, name):
+        new, old, rv = (np.asarray(full_new), np.asarray(full_old),
+                        np.asarray(row_val))
+        np.testing.assert_array_equal(new[2], rv[0], err_msg=name)
+        keep = [0, 1, 3]
+        np.testing.assert_array_equal(new[keep], old[keep], err_msg=name)
+
+    for key in cache:
+        for name in cache[key]:
+            check(out[key][name], cache[key][name], row[key][name],
+                  f"{key}/{name}")
+
+
+def test_scatter_row_then_reset_roundtrip_rwkv():
+    """Admission-then-eviction leaves the other rows untouched and the
+    recycled row zeroed — the engine lifecycle, on a recurrent cache."""
+    cache = _family_cache("rwkv6", batch=3)
+    row = _randomize(jax.tree_util.tree_map(lambda x: x[:1], cache), seed=7)
+    admitted = cache_lib.scatter_row(cache, row, jnp.asarray(1, jnp.int32))
+    evicted = cache_lib.reset_rows(admitted, jnp.asarray([False, True, False]))
+    for name, val in evicted["tm"].items():
+        got = np.asarray(val)
+        assert np.all(got[1] == 0), name
+        np.testing.assert_array_equal(
+            got[[0, 2]], np.asarray(cache["tm"][name])[[0, 2]], err_msg=name)

@@ -1,0 +1,209 @@
+"""ModelBundle + draft-model speculative drafting.
+
+The ``draft_model`` policy runs an independent small causal LM (an
+auxiliary ``ModelBundle``) that proposes each block autoregressively with
+its own loop-carried KV cache inside ``policy_state``; the primary model
+verifies.  Slot 0 of every draft is pinned to the verifier's greedy token,
+so with exact acceptance the decoded tokens equal ``greedy_decode`` for
+ANY draft parameters — including the random ones used here.  Draft quality
+moves iteration counts only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, tiny_rwkv, tiny_seq2seq
+from repro.config import DecodeConfig, ModelConfig
+from repro.core import decode as D
+from repro.core import policy as P
+from repro.core.bundle import ModelBundle
+from repro.core.draft import DraftModelDrafter
+from repro.models import model as M
+from repro.models import seq2seq as S
+from repro.serving import ContinuousBatchingEngine, EngineConfig, Request
+
+
+def draft_config(vocab: int) -> ModelConfig:
+    return ModelConfig(name="tiny-draft", num_layers=1, d_model=32,
+                       num_heads=2, num_kv_heads=2, d_ff=64,
+                       vocab_size=vocab, bpd_enabled=False,
+                       max_seq_len=512, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def dense_with_draft():
+    cfg = tiny_dense()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    dcfg = draft_config(cfg.vocab_size)
+    dparams = M.init(jax.random.PRNGKey(9), dcfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (3, 6), 0,
+                                          cfg.vocab_size)}
+    return cfg, params, {"draft": ModelBundle(dparams, dcfg)}, batch
+
+
+# ---------------------------------------------------------------------------
+# Losslessness: draft_model + exact == greedy_decode, token for token
+# ---------------------------------------------------------------------------
+
+
+def test_draft_model_token_identical_to_greedy(dense_with_draft):
+    cfg, params, bundles, batch = dense_with_draft
+    dec = DecodeConfig(max_new_tokens=12, block_k=4)
+    greedy_t, greedy_s = D.greedy_decode(params, cfg, dec, batch)
+    draft_t, draft_s = D.bpd_decode(params, cfg, dec, batch,
+                                    policy="draft_model", bundles=bundles)
+    w = batch["tokens"].shape[1] + dec.max_new_tokens  # common buffer width
+    np.testing.assert_array_equal(np.asarray(greedy_t[:, :w]),
+                                  np.asarray(draft_t[:, :w]))
+    np.testing.assert_array_equal(np.asarray(greedy_s["generated"]),
+                                  np.asarray(draft_s["generated"]))
+
+
+def test_draft_model_lossless_seq2seq():
+    cfg = tiny_seq2seq()
+    params = S.init(jax.random.PRNGKey(2), cfg)
+    dcfg = draft_config(cfg.vocab_size)
+    dparams = M.init(jax.random.PRNGKey(11), dcfg)
+    dec = DecodeConfig(max_new_tokens=10, block_k=4)
+    batch = {"src": jax.random.randint(jax.random.PRNGKey(3), (2, 6), 1,
+                                       cfg.vocab_size)}
+    ref, ref_s = D.bpd_decode_seq2seq(params, cfg, dec, batch)
+    out, out_s = D.bpd_decode_seq2seq(
+        params, cfg, dec, batch, policy="draft_model",
+        bundles={"draft": ModelBundle(dparams, dcfg)})
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    np.testing.assert_array_equal(np.asarray(ref_s["generated"]),
+                                  np.asarray(out_s["generated"]))
+
+
+def test_good_draft_model_cuts_iterations(dense_with_draft):
+    """A draft model that IS the verifier proposes exactly the verifier's
+    greedy continuation, so every block verifies fully: iterations drop to
+    ~max_new / block_k while the tokens stay identical (the speculative
+    speedup the bundle seam exists for)."""
+    cfg, params, _, batch = dense_with_draft
+    dec = DecodeConfig(max_new_tokens=12, block_k=4)
+    ref_t, ref_s = D.bpd_decode(params, cfg, dec, batch)
+    t, s = D.bpd_decode(params, cfg, dec, batch, policy="draft_model",
+                        bundles={"draft": ModelBundle(params, cfg)})
+    np.testing.assert_array_equal(np.asarray(ref_t), np.asarray(t))
+    assert int(s["iterations"]) == -(-12 // 4)  # ceil(max_new / block_k)
+    assert float(s["mean_accepted"]) >= 4.0 - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: admission prefill + per-slot draft cache lifecycle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.serving
+def test_engine_draft_model_matches_run_to_completion(dense_with_draft):
+    cfg, params, bundles, _ = dense_with_draft
+    dec = DecodeConfig(max_new_tokens=12, block_k=4)
+    eng = ContinuousBatchingEngine(
+        params, cfg, dec, EngineConfig(num_slots=2, max_prompt_len=6,
+                                       max_new_cap=12),
+        policy="draft_model", bundles=bundles)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=6) for _ in range(3)]
+    done = []
+    for i, p in enumerate(prompts):
+        while not eng.free_slots():     # third request waits for an eviction
+            done += eng.step()
+        eng.admit(Request(rid=i, prompt=p, max_new=12))
+        if i == 1:
+            done += eng.step()          # mid-flight progress between admits
+    while eng.has_active():
+        done += eng.step()
+    assert len(done) == 3
+    for f in done:
+        ref_t, ref_s = D.bpd_decode(
+            params, cfg, dec, {"tokens": jnp.asarray(prompts[f.rid])[None]},
+            policy="draft_model", bundles=bundles)
+        n = int(ref_s["text_len"][0])
+        np.testing.assert_array_equal(f.tokens, np.asarray(ref_t[0, 6:n]))
+    assert all(v == 1 for v in eng.compile_counts().values())
+
+
+@pytest.mark.serving
+def test_engine_rejects_recurrent_aux_bundle(dense_with_draft):
+    """The drafter's own bind rejects recurrent DRAFT bundles everywhere
+    (see test_bind_validates_draft_config); the engine additionally rejects
+    ANY recurrent auxiliary bundle, since its padded admission prefill is
+    KV-only sound."""
+    cfg, params, _, _ = dense_with_draft
+    rcfg = tiny_rwkv(vocab_size=cfg.vocab_size)
+    rparams = M.init(jax.random.PRNGKey(5), rcfg)
+    with pytest.raises(NotImplementedError, match="padded admission"):
+        ContinuousBatchingEngine(
+            params, cfg, DecodeConfig(max_new_tokens=8, block_k=4),
+            EngineConfig(num_slots=2, max_prompt_len=6, max_new_cap=8),
+            bundles={"aux": ModelBundle(rparams, rcfg)})
+
+
+# ---------------------------------------------------------------------------
+# Bundle binding + validation
+# ---------------------------------------------------------------------------
+
+
+def test_draft_model_unbound_raises(dense_with_draft):
+    cfg, params, _, batch = dense_with_draft
+    dec = DecodeConfig(max_new_tokens=8, block_k=4)
+    with pytest.raises(ValueError, match="ModelBundle"):
+        D.bpd_decode(params, cfg, dec, batch, policy="draft_model")
+
+
+def test_bind_validates_draft_config(dense_with_draft):
+    cfg, params, _, _ = dense_with_draft
+    drafter = DraftModelDrafter()
+    dcfg = draft_config(cfg.vocab_size)
+    dparams = M.init(jax.random.PRNGKey(4), dcfg)
+
+    bad_vocab = ModelBundle(dparams, dcfg.replace(vocab_size=13))
+    with pytest.raises(ValueError, match="vocab_size"):
+        drafter.bind({"draft": bad_vocab}, cfg)
+
+    rcfg = tiny_rwkv(vocab_size=cfg.vocab_size)
+    with pytest.raises(NotImplementedError, match="recurrent"):
+        drafter.bind({"draft": ModelBundle(None, rcfg)}, cfg)
+
+    s2s = tiny_seq2seq(vocab_size=cfg.vocab_size)
+    with pytest.raises(ValueError, match="decoder-only"):
+        drafter.bind({"draft": ModelBundle(None, s2s)}, cfg)
+
+    bound = drafter.bind({"draft": ModelBundle(dparams, dcfg)}, cfg)
+    assert bound.cfg == dcfg
+
+
+def test_session_policy_mismatch_guard(dense_with_draft):
+    """A session fixes its bundles at construction; the wrappers reject
+    late bundles and policy mismatches instead of silently re-binding."""
+    from repro.serving import DecodeSession
+
+    cfg, params, bundles, batch = dense_with_draft
+    dec = DecodeConfig(max_new_tokens=8, block_k=4)
+    sess = DecodeSession(params, cfg, dec, policy="draft_model",
+                         bundles=bundles)
+    with pytest.raises(ValueError, match="fixed at DecodeSession"):
+        D.bpd_decode(params, cfg, dec, batch, session=sess, bundles=bundles)
+    # same policy name through the session resolves to the bound policy
+    t1, _ = D.bpd_decode(params, cfg, dec, batch, session=sess,
+                         policy="draft_model")
+    t2, _ = D.bpd_decode(params, cfg, dec, batch, policy="draft_model",
+                         bundles=bundles)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_draft_cache_state_is_batch_leading(dense_with_draft):
+    """The drafter's loop state honours the policy-state contract (batch-
+    leading leaves), so state_specs/slot_specs can shard and the engine can
+    reset/scatter single rows."""
+    cfg, params, bundles, batch = dense_with_draft
+    dec = DecodeConfig(max_new_tokens=8, block_k=4)
+    pol = P.resolve_policy(dec, "draft_model").bind(bundles, cfg)
+    b = batch["tokens"].shape[0]
+    state = pol.init_state(cfg, dec, batch, b,
+                           aux={"draft": bundles["draft"].params})
+    for leaf in jax.tree_util.tree_leaves(state.drafter):
+        assert leaf.ndim >= 1 and leaf.shape[0] == b, leaf.shape
