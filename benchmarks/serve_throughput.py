@@ -15,6 +15,13 @@ Reports aggregate tokens/sec and p50/p95 request latency for both, plus
 the engine's jit cache sizes (the recompilation regression guard: admit /
 step / evict must each compile exactly once regardless of traffic).
 
+A third, **mixed-policy** row serves a Poisson workload whose requests
+carry PER-REQUEST decode policies over per-policy slot groups
+({exact, adaptive}), against the BEST of one-per-policy single-policy
+baseline runs of the same workload — gated (in --smoke) to within 10% of
+that baseline's tokens/sec with exactly one compile per group function;
+the row lands in ``BENCH_serve.json`` as the ``mixed_*`` fields.
+
 Device-work accounting is symmetric: ``model_calls`` counts jitted
 forward executions over the full batch width — prefill + decode
 iterations per static batch, admits + engine steps for the engine — so
@@ -92,12 +99,19 @@ def _rebase(reqs, t0: float) -> list:
 # ---------------------------------------------------------------------------
 
 
-def run_engine(params, cfg, dec, ecfg, reqs):
-    eng = ContinuousBatchingEngine(params, cfg, dec, ecfg)
-    # warm-up: compile admit/step/evict outside the measured window
+def run_engine(params, cfg, dec, ecfg, reqs, *, policies=None):
+    """Drive ``reqs`` through the engine.  ``policies`` ({name: slots})
+    switches on per-request decode policies: the engine partitions its
+    slots into per-policy groups and each request is served by the group
+    running its ``Request.policy``."""
+    eng = ContinuousBatchingEngine(params, cfg, dec, ecfg, policies=policies)
+    # warm-up: compile every group's admit/step/evict outside the measured
+    # window (one tiny request per policy group)
     warm = Scheduler(eng)
-    warm.submit(Request(rid=-1, prompt=np.zeros(ecfg.max_prompt_len,
-                                                np.int32), max_new=2))
+    for i, name in enumerate(eng.policy_names()):
+        warm.submit(Request(rid=-1 - i, policy=name,
+                            prompt=np.zeros(ecfg.max_prompt_len, np.int32),
+                            max_new=2))
     warm.run()
 
     sched = Scheduler(eng)
@@ -113,6 +127,11 @@ def run_engine(params, cfg, dec, ecfg, reqs):
     stats["tokens_per_model_call"] = (stats["total_tokens"]
                                       / max(stats["model_calls"], 1))
     stats["compile_counts"] = eng.compile_counts()
+    if policies:
+        stats["policy_groups"] = dict(policies)
+        stats["per_policy_tokens"] = {
+            n: sum(f.generated for f in finished if f.policy == n)
+            for n in eng.policy_names()}
     return stats
 
 
@@ -193,15 +212,70 @@ def run(smoke: bool = False, requests: int = 48, slots: int = 8,
 
     engine_stats = run_engine(params, cfg, dec, ecfg, reqs)
     static_stats = run_static(params, cfg, dec, ecfg, reqs)
+
+    # mixed-policy row: a Poisson workload with a PER-REQUEST decode policy
+    # served by per-policy slot groups, against its own single-policy
+    # baseline run of the SAME workload.  Two deliberate choices keep this
+    # a measurement of the serving stack rather than of workload shape:
+    #
+    #   * each group is sized at the baseline's slot width, so every group
+    #     step has the IDENTICAL geometry as the baseline step — the
+    #     comparison isolates the grouping machinery (per-group compiled
+    #     steps, round-robin dispatch, one fused sync per group step) from
+    #     small-batch matmul efficiency, a hardware property;
+    #   * the workload is long enough that the steady packed phase
+    #     dominates each group's drain tail (the last long request
+    #     decoding alone), which with a handful of requests would measure
+    #     workload fragmentation instead.
+    #
+    # Policy heterogeneity is a scheduling change, not a decoding change,
+    # so tokens/sec must stay within 10% of the best single-policy run
+    # (gated in main) with zero per-step recompilation after warmup.
+    mixed_n = max(requests, 64) if smoke else requests
+    mreqs = make_workload(rng, mixed_n, rate, ecfg.max_prompt_len,
+                          cfg.vocab_size, budgets)
+
+    groups = {"exact": slots, "adaptive": slots}
+    names = list(groups)
+    # "best single-policy run": one baseline per constituent policy on the
+    # same workload (every request forced to that one policy), best taken
+    # by tokens/sec — the mixed run is gated against the winner
+    base_runs = {}
+    for name in names:
+        base_reqs = [dataclasses.replace(r, policy=name) for r in mreqs]
+        base_runs[name] = run_engine(params, cfg, dec, ecfg, base_reqs,
+                                     policies={name: slots})
+    best_name = max(base_runs, key=lambda n: base_runs[n]["tokens_per_sec"])
+    single_base_stats = base_runs[best_name]
+    mixed_ecfg = dataclasses.replace(ecfg, num_slots=sum(groups.values()))
+    # round-robin within each budget class so both groups carry the same
+    # length mix (an index round-robin can hand one group most of the long
+    # requests, and its drain tail would be charged to the serving stack)
+    order = sorted(range(len(mreqs)), key=lambda i: (mreqs[i].max_new, i))
+    pol_of = {i: names[j % len(names)] for j, i in enumerate(order)}
+    mixed_reqs = [dataclasses.replace(r, policy=pol_of[i])
+                  for i, r in enumerate(mreqs)]
+    mixed_stats = run_engine(params, cfg, dec, mixed_ecfg, mixed_reqs,
+                             policies=groups)
+
     return {
         "config": {"requests": requests, "slots": slots, "rate": rate,
                    "budgets": list(budgets), "model": cfg.name,
-                   "smoke": smoke},
+                   "smoke": smoke, "mixed_groups": groups,
+                   "mixed_requests": mixed_n},
         "engine": engine_stats,
         "static": static_stats,
+        "single_base": single_base_stats,
+        "single_base_policy": best_name,
+        "single_base_all": {n: s["tokens_per_sec"]
+                            for n, s in base_runs.items()},
+        "mixed": mixed_stats,
         "speedup_tokens_per_sec": (engine_stats["tokens_per_sec"]
                                    / max(static_stats["tokens_per_sec"],
                                          1e-9)),
+        "mixed_vs_best_single": (mixed_stats["tokens_per_sec"]
+                                 / max(single_base_stats["tokens_per_sec"],
+                                       1e-9)),
     }
 
 
@@ -220,7 +294,7 @@ def main():
     res = run(smoke=args.smoke, requests=args.requests, slots=args.slots,
               rate=args.rate, seed=args.seed)
 
-    for mode in ("engine", "static"):
+    for mode in ("engine", "static", "mixed"):
         st = res[mode]
         for key in ("tokens_per_sec", "latency_p50_s", "latency_p95_s",
                     "model_calls", "tokens_per_model_call", "wall_seconds"):
@@ -229,12 +303,33 @@ def main():
           f"per_request_khat")
     print(f"serve/speedup_tokens_per_sec,{res['speedup_tokens_per_sec']:.3f},"
           f"engine_vs_static")
+    print(f"serve/mixed_vs_best_single,{res['mixed_vs_best_single']:.3f},"
+          f"mixed_policy_groups={res['config']['mixed_groups']}_vs_"
+          f"{res['single_base_policy']}")
 
     cc = res["engine"]["compile_counts"]
     if any(v != 1 for v in cc.values()):
         raise SystemExit(f"RECOMPILATION REGRESSION: engine jit cache sizes "
                          f"{cc} (expected 1 each)")
     print(f"serve/engine/compile_counts,{cc},ok")
+
+    # per-request-policy gates: every group's admit/step/evict compiled
+    # exactly once across the whole trafficked run (no per-step
+    # recompilation after warmup), and policy slot grouping costs at most
+    # 10% tokens/sec against the best single-policy run
+    mcc = res["mixed"]["compile_counts"]
+    if any(v != 1 for v in mcc.values()):
+        raise SystemExit(f"RECOMPILATION REGRESSION (mixed-policy): engine "
+                         f"jit cache sizes {mcc} (expected 1 each)")
+    print(f"serve/mixed/compile_counts,{mcc},ok")
+    if args.smoke and res["mixed_vs_best_single"] < 0.9:
+        raise SystemExit(
+            f"MIXED-POLICY THROUGHPUT REGRESSION: "
+            f"{res['mixed']['tokens_per_sec']:.1f} tok/s is "
+            f"{res['mixed_vs_best_single']:.2f}x the best single-policy "
+            f"run ({res['single_base_policy']}: "
+            f"{res['single_base']['tokens_per_sec']:.1f} tok/s on the "
+            f"same workload); per-request policies must cost < 10%")
 
     os.makedirs("experiments", exist_ok=True)
     # smoke runs get their own artifact so a CI-sized run never clobbers
@@ -257,6 +352,13 @@ def main():
         "static_tokens_per_model_call": res["static"]["tokens_per_model_call"],
         "engine_mean_accepted": res["engine"]["mean_accepted"],
         "compile_counts": cc,
+        "mixed_tokens_per_sec": res["mixed"]["tokens_per_sec"],
+        "mixed_vs_best_single": res["mixed_vs_best_single"],
+        "best_single_policy": res["single_base_policy"],
+        "single_policy_tokens_per_sec": res["single_base_all"],
+        "mixed_policy_groups": res["config"]["mixed_groups"],
+        "mixed_per_policy_tokens": res["mixed"]["per_policy_tokens"],
+        "mixed_compile_counts": mcc,
         "config": res["config"],
     }
     with open(os.path.join(REPO_ROOT, "BENCH_serve.json"), "w") as f:

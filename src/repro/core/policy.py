@@ -391,6 +391,35 @@ class DecodePolicy:
             return self
         return dataclasses.replace(self, drafter=drafter)
 
+    @property
+    def cache_key(self):
+        """Hashable structural identity for jit-cache keying.
+
+        Two policies with equal drafter/acceptor/schedule *parameters*
+        (not just equal registry names) share compiled decode entry points
+        and serving functions, while ``topk(top_k=2)`` and
+        ``topk(top_k=3)`` — same ``name`` — key separately.  Components
+        are frozen dataclasses all the way down (a bound drafter's
+        ``ModelConfig`` included), reduced here to nested (type, fields)
+        tuples so the key is stable across equal-valued instances.
+        """
+        return policy_cache_key(self)
+
+
+def policy_cache_key(obj):
+    """Reduce a policy (or any of its components) to a hashable tuple.
+
+    Frozen-dataclass components flatten to ``(type, (field, value), ...)``
+    recursively; everything else must already be hashable (ints, floats,
+    strings, tuples, None, callables)."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return (type(obj).__name__,) + tuple(
+            (f.name, policy_cache_key(getattr(obj, f.name)))
+            for f in dataclasses.fields(obj))
+    if isinstance(obj, (list, tuple)):
+        return tuple(policy_cache_key(x) for x in obj)
+    return obj
+
 
 # name -> builder(dec) -> DecodePolicy.  The legacy criterion strings are
 # aliases for the heads-drafted policies, so ``DecodeConfig.criterion`` and

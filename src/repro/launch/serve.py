@@ -5,12 +5,20 @@ blockwise parallel decoding.
         --ckpt-dir /tmp/ckpt --batch 4 --max-new 32 \
         [--criterion topk --top-k 2] [--policy topk_tree] [--sched sjf] \
         [--policy draft_model --draft-arch granite-3-8b \
-         --draft-ckpt /tmp/draft-ckpt]
+         --draft-ckpt /tmp/draft-ckpt] \
+        [--engine --policies exact=2,topk_tree=2]
 
-``--policy`` selects a registered decode policy (drafter × acceptor ×
-block schedule, see README "Decode policies"); unset, the legacy
-``--criterion`` alias applies.  ``--sched`` picks the engine's admission
-order (fcfs/sjf).
+``--policy`` selects the SESSION-DEFAULT decode policy (drafter ×
+acceptor × block schedule, see README "Decode policies"); unset, the
+legacy ``--criterion`` alias applies.  ``--sched`` picks the engine's
+admission order (fcfs/sjf).
+
+``--policies name=slots,name=slots`` (engine mode) partitions the slot
+slab into per-policy slot groups and makes the decode policy a
+PER-REQUEST field: each generated request carries a policy sampled from
+the configured groups (``Request.policy``; unset requests fall back to
+the ``--policy`` session default), and the engine schedules each group
+with its own compile-once step.
 
 ``--policy draft_model`` serves with the speculative draft-model drafter:
 a second (small) model — the ``--draft-arch`` smoke config, restored from
@@ -76,6 +84,12 @@ def main():
     ap.add_argument("--engine", action="store_true",
                     help="serve through the continuous-batching engine "
                          "(slots + admission) instead of one static batch")
+    ap.add_argument("--policies", default="",
+                    help="engine-mode per-policy slot groups, e.g. "
+                         "'exact=2,topk_tree=2' (must partition --batch); "
+                         "requests then carry a per-request policy sampled "
+                         "from the groups.  Empty: one group running the "
+                         "--policy/--criterion session default")
     ap.add_argument("--sched", default="fcfs", choices=["fcfs", "sjf"],
                     help="engine admission policy (scheduler)")
     ap.add_argument("--mesh-data", type=int, default=0,
@@ -112,11 +126,15 @@ def main():
         mesh = make_host_mesh(args.mesh_data, args.mesh_model, require=True)
         print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices")
 
-    bundles = draft_bundle(cfg, args)
+    groups = parse_policy_groups(args.policies)
+    if groups and not args.engine:
+        raise SystemExit("--policies configures per-request slot groups in "
+                         "the continuous-batching engine: add --engine")
+    bundles = draft_bundle(cfg, args, groups)
 
     if args.engine:
         serve_engine(params, cfg, dec, args, task, mesh=mesh,
-                     bundles=bundles)
+                     bundles=bundles, groups=groups)
         return
 
     # static batch through the same session layer the engine uses —
@@ -142,11 +160,29 @@ def main():
         print(f"    row {r}: {out}")
 
 
-def draft_bundle(cfg, args):
-    """Build the auxiliary draft ``ModelBundle`` for --policy draft_model
-    (None otherwise): the --draft-arch smoke config (default: the primary
-    arch), restored from --draft-ckpt when given."""
-    if args.policy != "draft_model":
+def parse_policy_groups(spec: str):
+    """'exact=2,topk_tree=2' -> {"exact": 2, "topk_tree": 2} (None when
+    empty).  Slot counts must partition --batch; the engine validates."""
+    if not spec:
+        return None
+    groups = {}
+    for part in spec.split(","):
+        name, sep, n = part.strip().partition("=")
+        if not sep or not name or not n.isdigit():
+            raise SystemExit(f"--policies entry {part!r}: expected "
+                             f"name=slots")
+        if name in groups:
+            raise SystemExit(f"--policies names {name!r} twice: one slot "
+                             f"group per policy")
+        groups[name] = int(n)
+    return groups
+
+
+def draft_bundle(cfg, args, groups=None):
+    """Build the auxiliary draft ``ModelBundle`` when any served policy is
+    draft_model (None otherwise): the --draft-arch smoke config (default:
+    the primary arch), restored from --draft-ckpt when given."""
+    if args.policy != "draft_model" and "draft_model" not in (groups or {}):
         return None
     from repro.core.bundle import ModelBundle
 
@@ -164,8 +200,10 @@ def draft_bundle(cfg, args):
     return {"draft": ModelBundle(dparams, dcfg)}
 
 
-def serve_engine(params, cfg, dec, args, task, *, mesh=None, bundles=None):
-    """Mixed-length request traffic through the continuous-batching engine."""
+def serve_engine(params, cfg, dec, args, task, *, mesh=None, bundles=None,
+                 groups=None):
+    """Mixed-length request traffic through the continuous-batching engine
+    — with ``groups``, mixed-POLICY traffic over per-policy slot groups."""
     from repro.serving import (ContinuousBatchingEngine, EngineConfig,
                                Request, Scheduler, aggregate_stats)
 
@@ -173,10 +211,11 @@ def serve_engine(params, cfg, dec, args, task, *, mesh=None, bundles=None):
                         max_prompt_len=args.prompt_len,
                         max_new_cap=args.max_new)
     engine = ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh,
-                                      bundles=bundles)
+                                      bundles=bundles, policies=groups)
     sched = Scheduler(engine, policy=args.sched)
 
     rng = np.random.default_rng(args.seed + 2)
+    names = engine.policy_names()
     n = 2 * args.batch
     for rid in range(n):
         plen = int(rng.integers(max(args.prompt_len // 2, 1),
@@ -184,7 +223,10 @@ def serve_engine(params, cfg, dec, args, task, *, mesh=None, bundles=None):
         sched.submit(Request(
             rid=rid, prompt=task.sample(rng, 1, plen)[0],
             max_new=int(rng.integers(max(args.max_new // 4, 1),
-                                     args.max_new + 1))))
+                                     args.max_new + 1)),
+            # the per-request policy field: sampled over the slot groups
+            # (None when the engine runs one default group)
+            policy=str(rng.choice(names)) if groups else None))
 
     t0 = time.time()
     finished = sched.run()
@@ -192,7 +234,8 @@ def serve_engine(params, cfg, dec, args, task, *, mesh=None, bundles=None):
     stats = aggregate_stats(finished, wall)
 
     print(f"[serve] engine: {n} requests over {args.batch} slots "
-          f"(sched={args.sched}, policy={engine.policy.name})")
+          f"(sched={args.sched}, "
+          f"{'groups=' + str(groups) if groups else 'policy=' + engine.policy.name})")
     print(f"[serve] {stats['total_tokens']} tokens in "
           f"{stats['total_invocations']} invocations, "
           f"{stats['tokens_per_sec']:.0f} tok/s, "
@@ -200,7 +243,7 @@ def serve_engine(params, cfg, dec, args, task, *, mesh=None, bundles=None):
           f"p95 {stats['latency_p95_s'] * 1e3:.0f}ms, "
           f"compile {engine.compile_counts()}")
     for f in sorted(finished, key=lambda f: f.rid):
-        print(f"    req {f.rid}: k̂={f.mean_accepted:.2f} "
+        print(f"    req {f.rid} [{f.policy}]: k̂={f.mean_accepted:.2f} "
               f"gen={f.generated} inv={f.invocations} "
               f"out={[int(x) for x in f.tokens]}")
 

@@ -7,7 +7,7 @@ Layering:
   engine.py    — scheduler + slot-metadata shell over a DecodeSession
   scheduler.py — queue, admission policy, workload driver, stats
 """
-from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.engine import ContinuousBatchingEngine, PolicyGroup
 from repro.serving.scheduler import Scheduler, aggregate_stats
 from repro.serving.session import DecodeSession, ServingFns
 from repro.serving.types import (EngineConfig, FinishedRequest, Request,
@@ -16,6 +16,7 @@ from repro.serving.types import (EngineConfig, FinishedRequest, Request,
 __all__ = [
     "ContinuousBatchingEngine",
     "DecodeSession",
+    "PolicyGroup",
     "ServingFns",
     "SlotBatch",
     "Scheduler",

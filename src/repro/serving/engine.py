@@ -12,24 +12,36 @@ iteration.  This engine generalizes ``BPDState`` to a slot-based
     scattered into the freed slot (``models.cache.scatter_row``) while the
     other slots keep decoding,
   * every slot carries its own prompt length, generation budget and
-    statistics, so the decode step is one ``bpd_iteration`` over the full
-    slot batch with a per-slot ``active`` mask and per-slot ``max_new``.
+    statistics, so a decode step is one ``bpd_iteration`` over a slot
+    group with a per-slot ``active`` mask and per-slot ``max_new``.
+
+**Per-request decode policies (policy slot grouping).**  The engine's slot
+slab is partitioned into per-policy *slot groups*: ``policies={"exact": 2,
+"topk_tree": 2}`` gives each named policy its own contiguous range of the
+``num_slots`` slab, materialized as a group-local ``SlotBatch`` view with
+its own compile-once init/admit/step/evict from
+``DecodeSession.serving_fns(policy=...)`` — one jitted step per distinct
+(policy, geometry), shared between groups via the session's
+``DecodePolicy.cache_key``-keyed jit cache.  An admitted request routes to
+the group running its ``Request.policy`` (``None`` = the session default);
+the host loop round-robins the active groups each ``step()``, dispatching
+every group's step before reading any status back, so device work overlaps
+and each *group step* costs exactly ONE fused device→host sync.
 
 The engine itself is a **scheduler + slot-metadata shell**: all device
-functions (init / admit / step / evict) are owned by a
-``serving.session.DecodeSession`` — the same sharding-aware driver behind
-``bpd_decode`` — and compile exactly once (padded prompts, traced slot
-indices).  Pass ``mesh=`` (or a prebuilt ``session=``) to shard the slot
-batch over the data axes and the model over the tensor axis; the engine's
-host logic is identical in both placements.  ``policy=`` (or the
-session's) selects the ``DecodePolicy``; per-slot policy state lives in
-``SlotBatch.policy_state`` and is reset on admit/evict.
+functions are owned by a ``serving.session.DecodeSession`` — the same
+sharding-aware driver behind ``bpd_decode`` — and compile exactly once per
+(policy, geometry) (padded prompts, traced slot indices and group ids).
+Pass ``mesh=`` (or a prebuilt ``session=``) to shard every group's slot
+batch over the data axes and the model over the tensor axis; each group's
+slot count must then divide the data axes on its own.
 
-The host loop performs exactly ONE device→host sync per step: the jitted
-step returns a fused (S,) int8 status (bit 0 = active, bit 1 =
+The host loop performs exactly ONE device→host sync per group step: the
+jitted step returns a fused (S,) int8 status (bit 0 = active, bit 1 =
 harvestable) alongside the donated slot state, and ``free_slots`` /
 ``has_active`` / a no-finish ``harvest`` read the host-side mirror
-(``num_host_syncs`` counts the transfers; gated in tests).
+(``num_host_syncs`` counts the transfers per GROUP STEP, never per slot —
+gated in tests).
 
 Padded prefill is safe because cache visibility is governed by absolute
 positions: a stale entry with stored position p is only attended when
@@ -41,29 +53,83 @@ would fold pad tokens into their final state, so the engine is gated to
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import DecodeConfig, ModelConfig
-from repro.serving.session import DecodeSession
+from repro.serving.session import DecodeSession, ServingFns
 from repro.serving.types import (EngineConfig, FinishedRequest, Request,
                                  SlotBatch)
 
-__all__ = ["ContinuousBatchingEngine", "SlotBatch"]
+__all__ = ["ContinuousBatchingEngine", "PolicyGroup", "SlotBatch"]
 
 I32 = jnp.int32
 
 
+@dataclasses.dataclass
+class PolicyGroup:
+    """Host-side record of one policy slot group: a contiguous view of the
+    engine's slot slab ([offset, offset + num_slots)) stepped by its own
+    compiled functions under its own decode policy."""
+
+    gid: int                    # group index (== SlotBatch.group rows)
+    name: str                   # registered policy name (routing key)
+    policy: object              # the bound DecodePolicy
+    offset: int                 # first global slot id of this group
+    num_slots: int              # slots in this group's view
+    fns: ServingFns             # compiled init/admit/step/evict
+    state: SlotBatch            # the group-local device state
+    status: np.ndarray          # host mirror, (num_slots,) int8
+    slot_meta: List[Optional[dict]]
+
+    def free_local(self) -> List[int]:
+        """Group-local indices of free slots (host mirror, bit 0 clear) —
+        the one definition of "free" shared by admission and the engine's
+        global free-slot view."""
+        return [i for i in range(self.num_slots) if not self.status[i] & 1]
+
+
+def _normalize_groups(policies, default_name: str,
+                      num_slots: int) -> List[Tuple[str, int]]:
+    """policies: None | {name: slots} | [(name, slots), ...] -> ordered
+    [(name, slots)] partitioning ``num_slots``."""
+    if policies is None:
+        return [(default_name, num_slots)]
+    items = (list(policies.items()) if isinstance(policies, dict)
+             else [tuple(p) for p in policies])
+    if not items:
+        raise ValueError("policies must name at least one slot group")
+    names = [n for n, _ in items]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate policy group names in {names}: one "
+                         f"slot group per policy")
+    for n, sl in items:
+        if sl <= 0:
+            raise ValueError(f"policy group {n!r} has {sl} slots: every "
+                             f"group needs at least one")
+    total = sum(sl for _, sl in items)
+    if total != num_slots:
+        raise ValueError(
+            f"policy groups {dict(items)} cover {total} slots but "
+            f"EngineConfig.num_slots={num_slots}: groups must partition "
+            f"the slot slab exactly")
+    return items
+
+
 class ContinuousBatchingEngine:
-    """Slot-based continuous batching for the decoder-only BPD loop."""
+    """Slot-based continuous batching for the decoder-only BPD loop,
+    with per-request decode policies via policy slot groups."""
 
     def __init__(self, params, cfg: ModelConfig, dec: DecodeConfig,
                  ecfg: EngineConfig, *, mesh=None,
                  session: Optional[DecodeSession] = None, policy=None,
-                 bundles=None):
+                 bundles=None,
+                 policies: Union[None, Dict[str, int],
+                                 Sequence[Tuple[str, int]]] = None):
         if cfg.block_type != "attn":
             raise NotImplementedError(
                 f"serving engine requires an attention-cache family "
@@ -98,16 +164,38 @@ class ContinuousBatchingEngine:
         self.prefix = cfg.num_meta_tokens
         self.context_len = self.prefix + ecfg.max_prompt_len + ecfg.max_new_cap
         self.buf_len = ecfg.max_prompt_len + ecfg.max_new_cap + self.block_k
-        self._fns = self.session.serving_fns(ecfg)
-        self.state = self._fns.init()
-        self.slot_meta: List[Optional[dict]] = [None] * ecfg.num_slots
+
+        # -- policy slot groups: partition the slab, one compiled fns set
+        # per distinct (policy, geometry), one state view per group --------
+        self.default_policy = self.policy.name
+        specs = _normalize_groups(policies, self.default_policy,
+                                  ecfg.num_slots)
+        self.groups: List[PolicyGroup] = []
+        offset = 0
+        for gid, (name, slots) in enumerate(specs):
+            gecfg = dataclasses.replace(ecfg, num_slots=slots)
+            # per-group mesh validation: each group's view shards the data
+            # axes on its own, so every group's slot count must divide them
+            gecfg.validate(dec=dec, mesh=self.session.mesh)
+            # the default group (policies=None) serves the session's BOUND
+            # policy object — re-resolving its name through the registry
+            # would silently replace a caller-supplied / hand-built
+            # DecodePolicy with the registry default of the same name
+            pol_arg = None if policies is None else name
+            fns = self.session.serving_fns(gecfg, policy=pol_arg)
+            self.groups.append(PolicyGroup(
+                gid=gid, name=name,
+                policy=self.session.bound_policy(pol_arg),
+                offset=offset, num_slots=slots, fns=fns,
+                state=fns.init(jnp.asarray(gid, I32)),
+                status=np.zeros((slots,), np.int8),
+                slot_meta=[None] * slots))
+            offset += slots
+        self._by_name = {g.name: g for g in self.groups}
+        self._rr = 0            # round-robin pointer over group steps
+
         self.num_admits = 0     # prefill calls — device work accounting
-        self.num_steps = 0      # batch iteration calls
-        # host mirror of the per-slot status (bit 0 = active, bit 1 =
-        # harvestable).  step() refreshes it from the device in ONE fused
-        # transfer; admit/evict update it host-side (their effects are known
-        # without a readback), so free_slots/has_active/harvest never sync.
-        self._status = np.zeros((ecfg.num_slots,), np.int8)
+        self.num_steps = 0      # GROUP step calls (model invocations)
         self.num_host_syncs = 0  # device->host readbacks (regression guard)
 
     @property
@@ -121,20 +209,61 @@ class ContinuousBatchingEngine:
         per bundle by the DecodeSession."""
         return self.session.aux_params
 
+    @property
+    def state(self) -> SlotBatch:
+        """The slot state — single-group engines only (the historical
+        engine API).  Multi-group engines expose per-group views via
+        ``groups`` / ``group_for``."""
+        if len(self.groups) != 1:
+            raise AttributeError(
+                f"engine has {len(self.groups)} policy slot groups — read "
+                f"engine.groups[gid].state (or group_for(policy).state) "
+                f"instead of the single-group .state shorthand")
+        return self.groups[0].state
+
+    # -- group routing -------------------------------------------------------
+
+    def group_for(self, policy: Optional[str]) -> PolicyGroup:
+        """The slot group serving ``policy`` (None = the session default).
+        Raises ValueError for policies the engine was not configured with,
+        resolving the name through ``config.registry`` first so unknown
+        names fail with the registry's message."""
+        name = policy or self.default_policy
+        g = self._by_name.get(name)
+        if g is None:
+            from repro.config import get_policy
+
+            get_policy(self.dec, name)  # unknown name -> registry ValueError
+            raise ValueError(
+                f"request policy {name!r} has no slot group in this engine "
+                f"(groups: {sorted(self._by_name)}): configure it via "
+                f"ContinuousBatchingEngine(policies={{{name!r}: n, ...}})")
+        return g
+
+    def policy_names(self) -> List[str]:
+        return [g.name for g in self.groups]
+
     # -- host-side API -------------------------------------------------------
 
-    def free_slots(self) -> List[int]:
-        return [i for i in range(self.ecfg.num_slots)
-                if not self._status[i] & 1]
+    def free_slots(self, policy: Optional[str] = None) -> List[int]:
+        """Global ids of free slots — all groups (default), or the single
+        group serving ``policy`` (a name; pass the default policy's name
+        to query the default group alone)."""
+        groups = self.groups if policy is None else [self.group_for(policy)]
+        return [g.offset + i for g in groups for i in g.free_local()]
 
     def has_active(self) -> bool:
-        return bool(np.any(self._status & 1))
+        return any(bool(np.any(g.status & 1)) for g in self.groups)
 
     def admit(self, req: Request, *, now: Optional[float] = None) -> int:
-        """Admit a request into a free slot; returns the slot index."""
-        free = self.free_slots()
+        """Admit a request into a free slot of its policy's group; returns
+        the global slot index."""
+        g = self.group_for(req.policy)
+        free = g.free_local()
         if not free:
-            raise RuntimeError("no free slot — poll step()/harvest first")
+            raise RuntimeError(
+                f"no free slot in policy group {g.name!r} — poll "
+                f"step()/harvest first")
         p = len(req.prompt)
         if not 0 < p <= self.ecfg.max_prompt_len:
             raise ValueError(
@@ -142,77 +271,110 @@ class ContinuousBatchingEngine:
         slot = free[0]
         prompt = np.zeros((self.ecfg.max_prompt_len,), np.int32)
         prompt[:p] = req.prompt
+        # source tokens for drafting policies: the request's src (padded /
+        # truncated to the admission geometry), defaulting to the prompt
+        src_toks = req.prompt if req.src is None else req.src
+        src = np.zeros((self.ecfg.max_prompt_len,), np.int32)
+        n_src = min(len(src_toks), self.ecfg.max_prompt_len)
+        src[:n_src] = src_toks[:n_src]
         max_new = int(np.clip(req.max_new, 1, self.ecfg.max_new_cap))
-        self.state = self._fns.admit(
-            self.params, self.aux_params, self.state, jnp.asarray(slot, I32),
+        g.state = g.fns.admit(
+            self.params, self.aux_params, g.state, jnp.asarray(slot, I32),
             jnp.asarray(prompt), jnp.asarray(p, I32),
-            jnp.asarray(max_new, I32))
-        self._status[slot] = 1          # known host-side: no readback needed
+            jnp.asarray(max_new, I32), jnp.asarray(src))
+        g.status[slot] = 1          # known host-side: no readback needed
         self.num_admits += 1
         admit_time = time.monotonic() if now is None else now
         if req.arrival is None:
             req.arrival = admit_time
-        self.slot_meta[slot] = {
+        g.slot_meta[slot] = {
             "req": req, "prompt_len": p, "max_new": max_new,
             "admit_time": admit_time,
         }
-        return slot
+        return g.offset + slot
 
     def step(self, *, now: Optional[float] = None) -> List[FinishedRequest]:
-        """One BPD iteration over all active slots, then harvest+evict."""
-        self.num_steps += 1
-        self.state, status = self._fns.step(self.params, self.aux_params,
-                                            self.state)
-        # the ONE per-step device->host round-trip: a fused (S,) int8 array
-        # carrying both the active and the finished bits (the harvest
-        # decision), instead of pulling state.active and state.finished
-        # separately
-        self._status = np.array(status)  # writable host copy
-        self.num_host_syncs += 1
+        """One BPD iteration over every active slot group, then
+        harvest+evict.
+
+        Groups step round-robin (the starting group rotates so no policy
+        is systematically served first), and ALL group steps are
+        dispatched before any status is read back — device work across
+        groups overlaps, and each group step costs exactly one fused
+        device→host sync.
+        """
+        n = len(self.groups)
+        order = [self.groups[(self._rr + i) % n] for i in range(n)]
+        self._rr = (self._rr + 1) % n
+        stepped = []
+        for g in order:
+            if not np.any(g.status & 1):
+                continue                     # idle group: no device work
+            g.state, status = g.fns.step(self.params, self.aux_params,
+                                         g.state)
+            self.num_steps += 1
+            stepped.append((g, status))
+        # the ONE per-group-step device->host round-trip: a fused (S,) int8
+        # array carrying both the active and the finished bits (the harvest
+        # decision) — pulled only after every group's step is in flight
+        for g, status in stepped:
+            g.status = np.array(status)      # writable host copy
+            self.num_host_syncs += 1
         return self.harvest(now=now)
 
     def harvest(self, *, now: Optional[float] = None) -> List[FinishedRequest]:
         """Retire finished slots: copy outputs out, free the slots.
 
-        Decides from the host-cached status — the common no-finish step
-        costs zero additional device syncs; the big per-slot arrays are
-        only pulled when something actually finished.
+        Decides from the host-cached status — the common no-finish group
+        step costs zero additional device syncs; the big per-slot arrays
+        are only pulled for groups where something actually finished.
         """
-        done_mask = (self._status & 2).astype(bool)
-        if not done_mask.any():
-            return []
-        t = time.monotonic() if now is None else now
-        tokens = np.asarray(self.state.tokens)
-        text_len = np.asarray(self.state.text_len)
-        generated = np.asarray(self.state.generated)
-        invocations = np.asarray(self.state.invocations)
-        self.num_host_syncs += 1  # one harvest pull (4 arrays, one sync site)
-        out = []
-        for i in np.nonzero(done_mask)[0]:
-            meta = self.slot_meta[i]
-            req: Request = meta["req"]
-            p = meta["prompt_len"]
-            iters = max(int(invocations[i]) - 1, 1)  # minus the prefill call
-            out.append(FinishedRequest(
-                rid=req.rid, prompt_len=p,
-                tokens=tokens[i, p:int(text_len[i])].copy(),
-                generated=int(generated[i]),
-                invocations=int(invocations[i]),
-                mean_accepted=float(generated[i]) / iters,
-                arrival=req.arrival, admit_time=meta["admit_time"],
-                finish_time=t))
-            self.slot_meta[i] = None
-        self.state = self._fns.evict(self.state, jnp.asarray(done_mask))
-        self._status[done_mask] = 0     # known host-side: freed, inactive
+        out: List[FinishedRequest] = []
+        t = None
+        for g in self.groups:
+            done_mask = (g.status & 2).astype(bool)
+            if not done_mask.any():
+                continue
+            if t is None:
+                t = time.monotonic() if now is None else now
+            tokens = np.asarray(g.state.tokens)
+            text_len = np.asarray(g.state.text_len)
+            generated = np.asarray(g.state.generated)
+            invocations = np.asarray(g.state.invocations)
+            self.num_host_syncs += 1  # one harvest pull per finishing group
+            for i in np.nonzero(done_mask)[0]:
+                meta = g.slot_meta[i]
+                req: Request = meta["req"]
+                p = meta["prompt_len"]
+                iters = max(int(invocations[i]) - 1, 1)  # minus the prefill
+                out.append(FinishedRequest(
+                    rid=req.rid, prompt_len=p,
+                    tokens=tokens[i, p:int(text_len[i])].copy(),
+                    generated=int(generated[i]),
+                    invocations=int(invocations[i]),
+                    mean_accepted=float(generated[i]) / iters,
+                    arrival=req.arrival, admit_time=meta["admit_time"],
+                    finish_time=t, policy=g.name))
+                g.slot_meta[i] = None
+            g.state = g.fns.evict(g.state, jnp.asarray(done_mask))
+            g.status[done_mask] = 0     # known host-side: freed, inactive
         return out
 
     # -- diagnostics ---------------------------------------------------------
 
     def compile_counts(self) -> dict:
         """jit cache sizes — the recompilation regression guard.  Each entry
-        must be ≤ 1 after any amount of traffic (static shapes by design)."""
-        return {
-            "admit": self._fns.admit._cache_size(),
-            "step": self._fns.step._cache_size(),
-            "evict": self._fns.evict._cache_size(),
-        }
+        must be ≤ 1 after any amount of traffic (static shapes by design).
+        Distinct (policy, geometry) fns are counted once even when several
+        groups share them (the session's jit cache dedups); multi-group
+        engines prefix entries with the policy name."""
+        single = len(self.groups) == 1
+        out, seen = {}, set()
+        for g in self.groups:
+            if id(g.fns) in seen:
+                continue
+            seen.add(id(g.fns))
+            for part in ("admit", "step", "evict"):
+                key = part if single else f"{g.name}/{part}"
+                out[key] = getattr(g.fns, part)._cache_size()
+        return out

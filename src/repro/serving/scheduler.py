@@ -3,13 +3,20 @@
 The scheduler owns the request queue and the admission policy; the engine
 owns the device slots.  One ``step()`` is the unit of serving work a
 production loop would run: admit every eligible queued request into free
-slots, then run one BPD iteration over the slot batch and retire whatever
-finished.
+slots, then run one BPD iteration over every active policy slot group and
+retire whatever finished.
 
 Policies:
   * ``fcfs`` — first come, first served (arrival order).
   * ``sjf``  — shortest job first by requested ``max_new``; reduces mean
                latency under mixed-length traffic at the cost of fairness.
+
+Per-request decode policies: each ``Request.policy`` routes to the engine
+slot group running that policy, so the scheduler buckets admission per
+group — a free ``topk_tree`` slot is filled by the best eligible
+``topk_tree`` request even when an older ``exact`` request is still
+queued (its slots are a different group).  The admission order (fcfs/sjf)
+applies within each bucket.
 
 ``run()`` drives a whole workload to completion on a real clock: requests
 with future arrival times are invisible until the clock reaches them
@@ -40,12 +47,14 @@ class Scheduler:
 
     def submit(self, req: Request) -> None:
         """Enqueue a request; invalid requests are rejected here, before
-        they can abort the serving loop mid-drain."""
+        they can abort the serving loop mid-drain — including requests
+        whose decode policy the engine has no slot group for."""
         p = len(req.prompt)
         cap = self.engine.ecfg.max_prompt_len
         if not 0 < p <= cap:
             raise ValueError(
                 f"request {req.rid}: prompt length {p} outside (0, {cap}]")
+        self.engine.group_for(req.policy)   # unknown policy -> ValueError
         if req.arrival is None:
             req.arrival = time.monotonic()
         self.queue.append(req)
@@ -56,8 +65,16 @@ class Scheduler:
             now = time.monotonic()
         return [r for r in self.queue if r.arrival <= now]
 
-    def _pop_next(self, now: float) -> Optional[Request]:
+    def _pop_next(self, now: float,
+                  group: Optional[str] = None) -> Optional[Request]:
+        """Best eligible request — optionally only those routed to the
+        ``group`` policy slot group."""
         eligible = [r for r in self.queue if r.arrival <= now]
+        if group is not None:
+            # delegate routing to the engine — one source of truth for
+            # which group a request's policy lands in
+            eligible = [r for r in eligible
+                        if self.engine.group_for(r.policy).name == group]
         if not eligible:
             return None
         if self.policy == "sjf":
@@ -70,13 +87,15 @@ class Scheduler:
     # -- serving loop --------------------------------------------------------
 
     def step(self, now: Optional[float] = None) -> List[FinishedRequest]:
-        """Admit eligible requests into free slots, then one engine step."""
+        """Admit eligible requests into each group's free slots, then one
+        engine step (= one BPD iteration per active group)."""
         t = time.monotonic() if now is None else now
-        for _ in range(len(self.engine.free_slots())):
-            req = self._pop_next(t)
-            if req is None:
-                break
-            self.engine.admit(req, now=now)
+        for name in self.engine.policy_names():
+            for _ in range(len(self.engine.free_slots(name))):
+                req = self._pop_next(t, group=name)
+                if req is None:
+                    break
+                self.engine.admit(req, now=now)
         if not self.engine.has_active():
             return []
         done = self.engine.step(now=now)

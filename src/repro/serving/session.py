@@ -63,15 +63,19 @@ def _geometry(batch: Dict) -> tuple:
 
 
 class ServingFns(NamedTuple):
-    """The engine's device functions, compiled once per EngineConfig.
+    """The engine's device functions, compiled once per (policy, geometry).
 
     ``aux`` is the session's {bundle name: params} dict of auxiliary
     models (empty for single-model sessions); it rides along wherever the
-    decode policy may run a model of its own.
+    decode policy may run a model of its own.  ``init`` takes the policy
+    slot-group id (traced, so every group of the same policy and geometry
+    shares one compiled function); ``admit`` additionally takes the
+    request's source tokens (padded like the prompt) for source-drafting
+    policies.
     """
 
-    init: Callable      # () -> SlotBatch (mesh-placed when sharded)
-    admit: Callable     # (params, aux, state, slot, prompt, plen, max_new) -> state
+    init: Callable      # (gid) -> SlotBatch (mesh-placed when sharded)
+    admit: Callable     # (params, aux, state, slot, prompt, plen, max_new, src) -> state
     step: Callable      # (params, aux, state) -> (state, status (S,) int8)
     evict: Callable     # (state, mask) -> state
 
@@ -80,15 +84,18 @@ class DecodeSession:
     """Sharding-aware owner of the model bundles + jitted decode entry
     points.
 
-    ``policy`` fixes the decode policy (drafter × acceptor × block
-    schedule) for the session's lifetime, exactly like ``dec``: every
-    entry point is jitted once per (bundles, policy, geometry) — bundles
-    are fixed at construction, so the per-session jit cache keys on
-    (policy, geometry) — and the policy's loop-carried state is part of
-    the sharded decode state (``sharding.policy.state_specs`` /
+    ``policy`` fixes the session's DEFAULT decode policy (drafter ×
+    acceptor × block schedule): every entry point is jitted once per
+    (bundles, policy, geometry) — bundles are fixed at construction, so
+    the per-session jit cache keys on (``DecodePolicy.cache_key``,
+    geometry) — and the policy's loop-carried state is part of the
+    sharded decode state (``sharding.policy.state_specs`` /
     ``slot_specs`` treat its batch-leading leaves like any other per-row
     array, with model-backed drafter caches spec'd under their own
-    bundle's config).
+    bundle's config).  ``serving_fns(policy=...)`` additionally builds
+    per-policy serving functions for the engine's slot groups, sharing
+    the same cache — one session serves heterogeneous per-request
+    policies without recompiling.
 
     ``bundles`` ({name: core.bundle.ModelBundle}) are the session's
     auxiliary models — e.g. ``{"draft": ModelBundle(draft_params,
@@ -250,7 +257,7 @@ class DecodeSession:
                 extra_in = (NamedSharding(self.mesh, P(ax)),)
             return self._jit_entry(fn, batch, extra_in, extra_structs)
 
-        fn = self._get(("bpd", pol.name) + _geometry(batch), build)
+        fn = self._get(("bpd", pol.cache_key) + _geometry(batch), build)
         return fn(self.params, self.aux_params, batch, budget)
 
     def greedy(self, batch: Dict):
@@ -293,21 +300,43 @@ class DecodeSession:
 
             return self._jit_entry(fn, batch)
 
-        fn = self._get(("s2s", pol.name) + _geometry(batch), build)
+        fn = self._get(("s2s", pol.cache_key) + _geometry(batch), build)
         return fn(self.params, self.aux_params, batch)
 
     # -- serving (continuous batching) ---------------------------------------
 
-    def serving_fns(self, ecfg: EngineConfig) -> ServingFns:
+    def bound_policy(self, policy=None):
+        """Resolve ``policy`` (a registered name / DecodePolicy / None for
+        the session default) and bind the session's bundles to it — the
+        form every serving slot group runs."""
+        if policy is None:
+            return self.policy
+        return policy_lib.resolve_policy(self.dec, policy).bind(
+            self.bundles, self.cfg)
+
+    def serving_fns(self, ecfg: EngineConfig, *, policy=None) -> ServingFns:
         """Compile-once device functions for the continuous-batching engine.
 
         All four are geometry-fixed by ``ecfg``: prompts are padded to
         ``max_prompt_len`` and slot indices are traced int32 scalars, so
         admit/step/evict each compile exactly once regardless of traffic —
         on a single device and on a ``("data", "model")`` mesh alike.
+
+        ``policy`` overrides the session default for one policy slot group
+        (per-request decode policies): the returned functions are built for
+        that policy and CACHED per (policy identity, geometry) — the jit
+        cache keys on ``DecodePolicy.cache_key``, so two groups running the
+        same policy at the same geometry share one compiled step, and a
+        heterogeneous engine compiles exactly one step per distinct
+        (policy, geometry) with no per-step recompilation.
         """
+        pol = self.bound_policy(policy)
+        key = ("serving", pol.cache_key, ecfg)
+        return self._get(key, lambda: self._build_serving_fns(ecfg, pol))
+
+    def _build_serving_fns(self, ecfg: EngineConfig,
+                           pol) -> ServingFns:
         cfg, dec, mesh = self.cfg, self.dec, self.mesh
-        pol = self.policy
         block_k = dec.block_k or cfg.bpd_k
         prefix = cfg.num_meta_tokens
         context_len = prefix + ecfg.max_prompt_len + ecfg.max_new_cap
@@ -322,11 +351,13 @@ class DecodeSession:
             ``tokens`` batch of the admission geometry — this keeps their
             state SHAPES identical across init (n = num_slots, no params),
             admit (n = 1, prefilled for real) and evict (reset rows).
-            Drafters that need decode-entry inputs the engine cannot
-            provide (``batch["src"]``) still reject here, at build time."""
-            return {"tokens": jnp.zeros((n, ecfg.max_prompt_len), I32)}
+            ``src`` (same padded geometry) lets source-drafting policies
+            (``input_copy``) serve through the engine: admission scatters
+            the request's real source row over these zeros."""
+            z = jnp.zeros((n, ecfg.max_prompt_len), I32)
+            return {"tokens": z, "src": z}
 
-        def init_slots() -> SlotBatch:
+        def init_slots(gid) -> SlotBatch:
             zeros = lambda: jnp.zeros((s,), I32)  # noqa: E731
             return SlotBatch(
                 tokens=jnp.zeros((s, buf_len), I32),
@@ -340,18 +371,19 @@ class DecodeSession:
                 max_new=zeros(),
                 invocations=zeros(),
                 policy_state=pol.init_state(cfg, dec, slots_batch(s), s),
+                group=jnp.full((s,), gid, I32),
             )
 
         slot_sh = cache_sh = None
         if mesh is not None:
-            struct = jax.eval_shape(init_slots)
+            struct = jax.eval_shape(init_slots, jax.ShapeDtypeStruct((), I32))
             slot_sh = sharding_policy.named(
                 mesh, sharding_policy.slot_specs(cfg, struct, mesh,
-                                                 draft_cfg=self.draft_cfg))
+                                                 policy=pol))
             cache_sh = slot_sh.caches
 
         def admit(params, aux, state: SlotBatch, slot, prompt, prompt_len,
-                  max_new) -> SlotBatch:
+                  max_new, src) -> SlotBatch:
             """Prefill one padded prompt into row ``slot``.
 
             The single-row prefill is replicated work (batch 1 never splits
@@ -373,9 +405,11 @@ class DecodeSession:
             # must not inherit the previous occupant's drafter/schedule
             # state — and the policy's drafter proposes the first block
             # (a model-backed drafter prefills its own cache on the padded
-            # prompt here, with its params from ``aux``)
-            row_ps = pol.init_state(cfg, dec, {"tokens": prompt[None]}, 1,
-                                    aux=aux)
+            # prompt here, with its params from ``aux``; a source-drafting
+            # policy stores the request's src row)
+            row_ps = pol.init_state(cfg, dec,
+                                    {"tokens": prompt[None],
+                                     "src": src[None]}, 1, aux=aux)
             last_tok = jnp.take(prompt, jnp.maximum(prompt_len - 1, 0))
             row_props, row_ds = decode_lib.initial_draft(
                 pol, logits[None], prompt_len, block_k, row_ps.drafter,
@@ -454,11 +488,12 @@ class DecodeSession:
         aux_sh = self.aux_shardings
         state_dn = (2,) if self.donate else ()  # state follows (params, aux)
         return ServingFns(
-            init=self._with_mesh(jax.jit(init_slots, out_shardings=slot_sh)),
+            init=self._with_mesh(jax.jit(init_slots, in_shardings=(rep,),
+                                         out_shardings=slot_sh)),
             admit=self._with_mesh(jax.jit(
                 admit,
                 in_shardings=(self.param_shardings, aux_sh, slot_sh, rep,
-                              rep, rep, rep),
+                              rep, rep, rep, rep),
                 out_shardings=slot_sh, donate_argnums=state_dn)),
             step=self._with_mesh(jax.jit(
                 step, in_shardings=(self.param_shardings, aux_sh, slot_sh),

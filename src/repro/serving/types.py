@@ -23,6 +23,11 @@ class SlotBatch(NamedTuple):
     The slot dimension IS the decode batch dimension — under a mesh it
     shards over the data axes (``sharding.policy.slot_specs``) exactly like
     a static decode batch, and admission/eviction stay slot-local scatters.
+
+    With per-request decode policies the engine's slot slab is partitioned
+    into per-policy *slot groups*; each group's ``SlotBatch`` is the
+    group-local view of the slab (its ``group`` field records which group
+    the rows belong to), stepped by that group's own compiled functions.
     """
 
     tokens: "jnp.ndarray"      # (S, buf) per-slot prompt+output buffer
@@ -37,6 +42,12 @@ class SlotBatch(NamedTuple):
     invocations: "jnp.ndarray" # (S,) model calls spent on this request
     policy_state: Any = ()     # per-slot DecodePolicy state (batch-leading
                                # leaves; reset on admit/evict)
+    group: Any = ()            # (S,) int32 policy slot-group id: stamps
+                               # every device-side state dump with the
+                               # group that owns it (asserted in the
+                               # equivalence tests), and is the routing
+                               # key a future policy-batched step would
+                               # switch on device-side
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,15 +109,30 @@ class Request:
     ``arrival`` is an absolute ``time.monotonic()`` instant; ``None`` means
     "now" — the scheduler (or engine, for direct admission) stamps it, so
     latency = finish - arrival is always well-defined.
+
+    ``policy`` names the registered decode policy this request wants
+    (resolved through ``config.registry``); ``None`` means the engine's
+    session default.  The engine serves a request from the slot group
+    running its policy, so only policies the engine was configured with
+    are admissible.
+
+    ``src`` optionally carries source tokens for source-drafting policies
+    (``input_copy``); ``None`` defaults to the prompt itself at admission.
+    Drafts never change accepted tokens under exact acceptance, so ``src``
+    only moves iteration counts.
     """
 
     rid: int
     prompt: np.ndarray          # (P,) int32 token ids, P <= max_prompt_len
     max_new: int                # requested tokens, clamped to max_new_cap
     arrival: Optional[float] = None
+    policy: Optional[str] = None  # registered policy name; None = default
+    src: Optional[np.ndarray] = None  # source tokens for drafting policies
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.src is not None:
+            self.src = np.asarray(self.src, np.int32).reshape(-1)
 
 
 @dataclasses.dataclass
@@ -122,6 +148,7 @@ class FinishedRequest:
     arrival: float
     admit_time: float
     finish_time: float
+    policy: str = ""            # decode policy that served this request
 
     @property
     def latency(self) -> float:

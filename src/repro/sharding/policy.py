@@ -204,7 +204,8 @@ def cache_specs(cfg: ModelConfig, caches: Pytree, mesh: Mesh,
 
 def state_specs(cfg: ModelConfig, state: Any, mesh: Mesh, *,
                 batch_size: Optional[int] = None,
-                draft_cfg: Optional[ModelConfig] = None) -> Any:
+                draft_cfg: Optional[ModelConfig] = None,
+                policy: Any = None) -> Any:
     """PartitionSpec pytree for a batch-leading decode loop state.
 
     ``state`` is any NamedTuple whose arrays lead with the batch dimension
@@ -228,7 +229,15 @@ def state_specs(cfg: ModelConfig, state: Any, mesh: Mesh, *,
     ``"caches"`` cache pytree (the ``draft_model`` policy's loop-carried
     draft KV cache) gets the full ``cache_specs`` treatment under the
     DRAFT model's config instead of the generic batch-leading rule.
+
+    ``policy`` (a bound ``core.policy.DecodePolicy``) is the per-group
+    form of the same information: when given and ``draft_cfg`` is not,
+    the draft config is read off ``policy.drafter.cfg`` — so callers that
+    build specs for several policy slot groups (the serving engine) pass
+    each group's own policy instead of one session-global draft config.
     """
+    if draft_cfg is None and policy is not None:
+        draft_cfg = getattr(policy.drafter, "cfg", None)
     b = batch_size if batch_size is not None else state.tokens.shape[0]
     ax = batch_axes(mesh, b)
 
@@ -261,14 +270,19 @@ def state_specs(cfg: ModelConfig, state: Any, mesh: Mesh, *,
 
 
 def slot_specs(cfg: ModelConfig, slots: Any, mesh: Mesh, *,
-               draft_cfg: Optional[ModelConfig] = None) -> Any:
+               draft_cfg: Optional[ModelConfig] = None,
+               policy: Any = None) -> Any:
     """Specs for the serving engine's ``SlotBatch`` (slot dim == batch dim).
 
     Identical derivation to ``state_specs`` — the slot batch IS the decode
     batch; admission/eviction scatters stay local to the owning data shard.
+    Called once per policy slot group: each group's ``SlotBatch`` is its
+    own view of the engine's slot slab, so ``policy=`` (the GROUP's bound
+    policy) lets a model-backed drafter's cache spec under its own draft
+    config while other groups in the same engine spec generically.
     """
     return state_specs(cfg, slots, mesh, batch_size=slots.tokens.shape[0],
-                       draft_cfg=draft_cfg)
+                       draft_cfg=draft_cfg, policy=policy)
 
 
 def data_axis_size(mesh: Mesh) -> int:

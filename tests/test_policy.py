@@ -102,6 +102,54 @@ def test_adaptive_schedule_cap_tracks_acceptance():
     assert bool(jnp.all(khat == k))
 
 
+def test_adaptive_cap_shrinks_then_recovers_stepwise():
+    """Deterministic cap dynamics, asserted step-by-step: sustained
+    rejection walks the k̂-driven cap down toward min_block, sustained
+    acceptance walks it back up to the full block — each step checked
+    against an independent float32 replica of the documented controller
+    (EMA of accepted/cap; cap +1 above ``grow``, -1 below ``shrink``)."""
+    k, rem = 4, jnp.full((1,), 99, I32)
+    sched = P.AdaptiveSchedule(min_block=1, decay=0.5, grow=0.8, shrink=0.45)
+    state = sched.init_state(1)
+    reject = jnp.zeros((1, k), bool).at[:, 0].set(True)   # prefix = 1
+    accept = jnp.ones((1, k), bool)                       # prefix = k
+    phases = [(reject, 8), (accept, 10)]
+
+    rate, cap = np.float32(1.0), k          # replica state (cap pre-clip)
+    caps, khats = [], []
+    for accepts, steps in phases:
+        prefix = 1 if accepts is reject else k
+        for _ in range(steps):
+            khat, state = sched.block_size(accepts, rem, state)
+            cap = min(max(cap, 1), k)                      # clip into [1, k]
+            accepted = min(max(prefix, 1), cap)
+            want_khat = min(accepted, 99)
+            rate = np.float32(rate * np.float32(0.5)
+                              + np.float32(0.5) * np.float32(accepted)
+                              / np.float32(cap))
+            if rate >= np.float32(0.8):
+                cap = min(cap + 1, k)
+            elif rate <= np.float32(0.45):
+                cap = max(cap - 1, 1)
+            assert int(khat[0]) == want_khat, (len(khats), khat, want_khat)
+            assert int(state["cap"][0]) == cap, (len(caps), state, cap)
+            assert np.float32(state["rate"][0]) == pytest.approx(rate,
+                                                                 abs=1e-6)
+            caps.append(int(state["cap"][0]))
+            khats.append(int(khat[0]))
+
+    # milestones: the rejection phase shrank the cap to (near) min_block,
+    # and the acceptance phase recovered it to the full block
+    assert min(caps[:8]) <= 2, caps
+    assert caps[8:].count(k) >= 1 and caps[-1] == k, caps
+    assert khats[-1] == k                   # recovered cap re-enables k̂ = k
+    # during sustained full acceptance, k̂ is pinned to the (growing) cap:
+    # it climbs monotonically back to k instead of jumping there
+    recovery = khats[8:]
+    assert recovery == sorted(recovery), recovery
+    assert recovery[0] < k, recovery        # the shrunk cap really bound k̂
+
+
 def test_adaptive_rows_are_independent():
     sched = P.AdaptiveSchedule(decay=0.5)
     state = sched.init_state(2)

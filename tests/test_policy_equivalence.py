@@ -1,0 +1,300 @@
+"""Policy-equivalence harness for per-request decode policies.
+
+The gate for the serving engine's policy slot grouping: a MIXED-policy
+engine run — heterogeneous ``Request.policy`` fields served by per-policy
+slot groups, with admission and eviction interleaved mid-flight — must be
+per-request token-identical to a single-policy ``DecodeSession`` run of
+the same request.  Covered mixes: {exact, topk, input_copy, topk_tree,
+draft_model} × {fcfs, sjf} on a single device, and a 2×2
+("data", "model") mesh variant (skips on 1-device hosts, runs in the CI
+``sharded`` job).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense
+from repro.config import DecodeConfig, ModelConfig
+from repro.core.bundle import ModelBundle
+from repro.models import model as M
+from repro.serving import (
+    ContinuousBatchingEngine,
+    DecodeSession,
+    EngineConfig,
+    Request,
+    Scheduler,
+)
+
+pytestmark = pytest.mark.serving
+
+# one slot group per policy in the mix; input_copy drafts from Request.src
+# (defaulting to the prompt) and draft_model runs the auxiliary bundle
+MIX = ("exact", "topk", "input_copy", "topk_tree", "draft_model")
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = tiny_dense()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    # top_k=2 makes the topk group genuinely diverge from exact tokens
+    dec = DecodeConfig(max_new_tokens=12, block_k=4, top_k=2)
+    dcfg = ModelConfig(name="tiny-draft", num_layers=1, d_model=32,
+                       num_heads=2, num_kv_heads=2, d_ff=64,
+                       vocab_size=cfg.vocab_size, bpd_enabled=False,
+                       max_seq_len=512, dtype="float32")
+    dparams = M.init(jax.random.PRNGKey(9), dcfg)
+    bundles = {"draft": ModelBundle(dparams, dcfg)}
+    return cfg, params, dec, bundles
+
+
+def _workload(cfg, ecfg, n_per_policy=2, seed=7):
+    """n_per_policy requests per policy in MIX, mixed prompt lengths and
+    budgets — more requests than slots, so groups evict and re-admit."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_per_policy):
+        for p in MIX:
+            plen = int(rng.integers(3, ecfg.max_prompt_len + 1))
+            reqs.append(Request(
+                rid=len(reqs), policy=p,
+                prompt=rng.integers(0, cfg.vocab_size, size=plen),
+                max_new=int(rng.integers(4, ecfg.max_new_cap + 1))))
+    return reqs
+
+
+_REF_CACHE = {}  # (policy, prompt, src, max_new) -> result; the fcfs and
+                 # sjf parametrizations verify the identical workload, so
+                 # memoizing halves the suite's reference decodes
+
+
+def _single_policy_reference(stack, req, ecfg):
+    """The gate's reference: a SINGLE-policy DecodeSession run of exactly
+    this request (its own policy, its own budget, no other traffic)."""
+    cfg, params, dec, bundles = stack
+    pol = req.policy or dec.criterion
+    max_new = min(req.max_new, ecfg.max_new_cap)
+    src_key = None if req.src is None else req.src.tobytes()
+    key = (pol, req.prompt.tobytes(), src_key, max_new)
+    if key in _REF_CACHE:
+        return _REF_CACHE[key]
+    d = dec.replace(max_new_tokens=max_new)
+    sess = DecodeSession(params, cfg, d, policy=pol,
+                         bundles=bundles if pol == "draft_model" else None)
+    batch = {"tokens": jnp.asarray(req.prompt)[None]}
+    if pol == "input_copy":
+        # the engine's admission pads src to the admission geometry — feed
+        # the reference the identical padded row so even draft contents
+        # (and therefore iteration counts) line up
+        src = np.zeros((ecfg.max_prompt_len,), np.int32)
+        toks = req.prompt if req.src is None else req.src
+        src[:len(toks)] = toks
+        batch["src"] = jnp.asarray(src)[None]
+    out, stats = sess.decode(batch)
+    n = int(stats["text_len"][0])
+    _REF_CACHE[key] = (np.asarray(out[0, len(req.prompt):n]),
+                       int(stats["generated"][0]))
+    return _REF_CACHE[key]
+
+
+def _check_all(stack, ecfg, finished, reqs):
+    by_rid = {f.rid: f for f in finished}
+    assert sorted(by_rid) == [r.rid for r in reqs]
+    for r in reqs:
+        f = by_rid[r.rid]
+        assert f.policy == (r.policy or "exact")
+        ref_toks, ref_gen = _single_policy_reference(stack, r, ecfg)
+        np.testing.assert_array_equal(
+            f.tokens, ref_toks,
+            err_msg=f"rid={r.rid} policy={r.policy}: mixed-policy engine "
+                    f"tokens diverge from the single-policy session run")
+        assert f.generated == ref_gen, (r.rid, r.policy)
+
+
+@pytest.mark.parametrize("sched_policy", ["fcfs", "sjf"])
+def test_mixed_policy_engine_token_identical(stack, sched_policy):
+    """5-policy mix, 1 slot per group, 2 requests per policy: every group
+    evicts its first request and admits its second while other groups are
+    mid-decode — admission/eviction interleave across heterogeneous
+    policies, and every request still decodes exactly like a lone
+    single-policy session run."""
+    cfg, params, dec, bundles = stack
+    ecfg = EngineConfig(num_slots=len(MIX), max_prompt_len=6, max_new_cap=12)
+    eng = ContinuousBatchingEngine(params, cfg, dec, ecfg, bundles=bundles,
+                                   policies={p: 1 for p in MIX})
+    sched = Scheduler(eng, policy=sched_policy)
+    reqs = _workload(cfg, ecfg)
+    for r in reqs:
+        sched.submit(r)
+    finished = sched.run()
+    _check_all(stack, ecfg, finished, reqs)
+    # every distinct (policy, geometry) compiled exactly once under all
+    # that admission/eviction traffic
+    assert all(v == 1 for v in eng.compile_counts().values()), \
+        eng.compile_counts()
+    # every group's device-side state is stamped with its own group id
+    # (SlotBatch.group metadata survives admit/step/evict round trips)
+    for g in eng.groups:
+        assert np.all(np.asarray(g.state.group) == g.gid), g.name
+
+
+def test_midflight_admission_across_groups(stack):
+    """Engine-level interleaving: requests admitted while OTHER policy
+    groups are mid-decode (and after their own group evicted a finished
+    request) keep their single-policy decode exactly."""
+    cfg, params, dec, bundles = stack
+    ecfg = EngineConfig(num_slots=3, max_prompt_len=6, max_new_cap=12)
+    eng = ContinuousBatchingEngine(
+        params, cfg, dec, ecfg, bundles=bundles,
+        policies={"exact": 1, "topk_tree": 1, "draft_model": 1})
+    rng = np.random.default_rng(11)
+    mk = lambda rid, pol, mn: Request(  # noqa: E731
+        rid=rid, policy=pol, max_new=mn,
+        prompt=rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 7))))
+    reqs = [mk(0, "exact", 12), mk(1, "topk_tree", 4), mk(2, "draft_model", 6),
+            mk(3, "topk_tree", 8), mk(4, "exact", 5)]
+    done = []
+    eng.admit(reqs[0])
+    done += eng.step()                      # exact is mid-decode...
+    eng.admit(reqs[1])                      # ...when topk_tree admits
+    eng.admit(reqs[2])
+    while not eng.free_slots("topk_tree"):  # rid 1 evicts mid-flight
+        done += eng.step()
+    eng.admit(reqs[3])                      # re-admission into the freed slot
+    while not eng.free_slots("exact"):      # rid 0 evicts while 3 decodes
+        done += eng.step()
+    eng.admit(reqs[4])
+    while eng.has_active():
+        done += eng.step()
+    _check_all(stack, ecfg, done, reqs)
+
+
+def test_unconfigured_policy_is_rejected(stack):
+    cfg, params, dec, bundles = stack
+    ecfg = EngineConfig(num_slots=2, max_prompt_len=6, max_new_cap=12)
+    eng = ContinuousBatchingEngine(params, cfg, dec, ecfg,
+                                   policies={"exact": 1, "topk_tree": 1})
+    req = Request(rid=0, prompt=np.ones(4, np.int32), max_new=4,
+                  policy="adaptive")
+    with pytest.raises(ValueError, match="no slot group"):
+        eng.admit(req)
+    # unknown names fail with the registry's message, not a KeyError
+    with pytest.raises(ValueError, match="unknown decode policy"):
+        eng.admit(dataclasses.replace(req, policy="nope"))
+    # the scheduler rejects at submit time, before a drain could abort
+    sched = Scheduler(eng)
+    with pytest.raises(ValueError, match="no slot group"):
+        sched.submit(req)
+    assert not sched.queue
+
+
+def test_caller_supplied_policy_object_is_served(stack):
+    """A hand-built / modified DecodePolicy OBJECT passed as the session
+    default must actually be served — not silently replaced by the
+    registry entry of the same name (regression: the default group once
+    re-resolved the policy by NAME)."""
+    from repro.config import get_policy
+    from repro.core.policy import TopKAcceptor
+
+    cfg, params, dec, _ = stack
+    custom = dataclasses.replace(get_policy(dec, "topk"),
+                                 acceptor=TopKAcceptor(top_k=7),
+                                 name="custom")
+    ecfg = EngineConfig(num_slots=1, max_prompt_len=6, max_new_cap=8)
+    eng = ContinuousBatchingEngine(params, cfg, dec, ecfg, policy=custom)
+    assert eng.groups[0].policy.acceptor.top_k == 7
+    assert eng.policy_names() == ["custom"]
+    # ...and requests route to it by default and by its custom name
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab_size, size=5)
+    eng.admit(Request(rid=0, prompt=prompt, max_new=8))
+    done = []
+    while eng.has_active():
+        done += eng.step()
+    sess = DecodeSession(params, cfg, dec.replace(max_new_tokens=8),
+                         policy=custom)
+    out, stats = sess.decode({"tokens": jnp.asarray(prompt)[None]})
+    n = int(stats["text_len"][0])
+    np.testing.assert_array_equal(done[0].tokens, np.asarray(out[0, 5:n]))
+
+
+def test_group_partition_validation(stack):
+    cfg, params, dec, _ = stack
+    ecfg = EngineConfig(num_slots=4, max_prompt_len=6, max_new_cap=12)
+    with pytest.raises(ValueError, match="partition"):
+        ContinuousBatchingEngine(params, cfg, dec, ecfg,
+                                 policies={"exact": 1, "topk_tree": 1})
+    with pytest.raises(ValueError, match="at least one"):
+        ContinuousBatchingEngine(params, cfg, dec, ecfg,
+                                 policies={"exact": 4, "topk_tree": 0})
+
+
+# ---------------------------------------------------------------------------
+# Sharded variant (CI `sharded` job; skips on 1-device hosts)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >=4 host devices: run with XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8")
+    from repro.launch.mesh import make_host_mesh
+
+    return make_host_mesh(data=2, model=2, require=True)
+
+
+@pytest.mark.sharded
+def test_mixed_policy_engine_sharded_token_identical(stack, mesh):
+    """The mixed-policy engine on a 2×2 ("data", "model") mesh: each
+    group's slot view shards the data axis on its own (2 slots / group),
+    and every request still matches its single-device single-policy
+    reference byte-for-byte."""
+    cfg, params, dec, bundles = stack
+    ecfg = EngineConfig(num_slots=4, max_prompt_len=6, max_new_cap=12)
+    eng = ContinuousBatchingEngine(
+        params, cfg, dec, ecfg, mesh=mesh, bundles=bundles,
+        policies={"exact": 2, "topk_tree": 2})
+    rng = np.random.default_rng(13)
+    reqs = []
+    for i, pol in enumerate(["exact", "topk_tree", "exact", "topk_tree",
+                             "exact", "topk_tree"]):
+        reqs.append(Request(
+            rid=i, policy=pol,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(3, 7))),
+            max_new=int(rng.integers(4, 13))))
+    done = []
+    eng.admit(reqs[0])
+    done += eng.step()                      # mid-flight across groups
+    for r in reqs[1:4]:
+        eng.admit(r)
+    while len(done) < 2:
+        done += eng.step()
+    for r in reqs[4:]:                      # re-admission into freed slots
+        while not eng.free_slots(r.policy):
+            done += eng.step()
+        eng.admit(r)
+    while eng.has_active():
+        done += eng.step()
+    _check_all(stack, ecfg, done, reqs)
+    assert all(v == 1 for v in eng.compile_counts().values()), \
+        eng.compile_counts()
+    # per-group slot views genuinely shard: data over slots, model over kv
+    for g in eng.groups:
+        k = g.state.caches[0]["attn"]["k"]
+        axes = {a for e in k.sharding.spec if e
+                for a in (e if isinstance(e, tuple) else (e,))}
+        assert {"data", "model"} <= axes, (g.name, k.sharding)
+
+
+@pytest.mark.sharded
+def test_group_mesh_divisibility(stack, mesh):
+    """Each group's slot view must divide the data axes on its own."""
+    cfg, params, dec, _ = stack
+    ecfg = EngineConfig(num_slots=4, max_prompt_len=6, max_new_cap=12)
+    with pytest.raises(ValueError, match="divisible"):
+        ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh,
+                                 policies={"exact": 3, "topk_tree": 1})

@@ -173,6 +173,63 @@ def test_recurrent_families_are_gated():
         ContinuousBatchingEngine(params, cfg, DecodeConfig(), EngineConfig())
 
 
+@pytest.mark.parametrize("groups", [
+    {"exact": 1, "adaptive": 2},                      # 2-policy mix
+    {"exact": 1, "topk": 1, "adaptive": 2},           # 3-policy mix
+])
+def test_host_syncs_count_group_steps_not_members(groups):
+    """``num_host_syncs`` accounting under policy slot grouping: one fused
+    sync per GROUP STEP — never one per slot group member, and idle groups
+    cost nothing.  The bound for N engine steps with g active groups is
+    exactly N * g (+ one harvest pull per finishing group at the end)."""
+    cfg = tiny_dense()
+    params = M.init(jax.random.PRNGKey(8), cfg)
+    dec = DecodeConfig(max_new_tokens=24, block_k=4)
+    eng = ContinuousBatchingEngine(
+        params, cfg, dec,
+        EngineConfig(num_slots=sum(groups.values()), max_prompt_len=6,
+                     max_new_cap=24), policies=groups)
+    rng = np.random.default_rng(13)
+    mk = lambda rid, pol: Request(  # noqa: E731
+        rid=rid, policy=pol, max_new=24,
+        prompt=rng.integers(0, cfg.vocab_size, size=6))
+
+    # phase 1: only the multi-slot 'adaptive' group is active — with BOTH
+    # of its slots occupied, so per-member accounting would double-count
+    eng.admit(mk(0, "adaptive"))
+    eng.admit(mk(1, "adaptive"))
+    before = eng.num_host_syncs
+    for _ in range(2):
+        assert not eng.step()
+    assert eng.num_host_syncs - before == 2      # 2 steps x 1 active group
+
+    # phase 2: one request per remaining group — every group active
+    for i, name in enumerate(n for n in groups if n != "adaptive"):
+        eng.admit(mk(2 + i, name))
+    before = eng.num_host_syncs
+    for _ in range(2):
+        assert not eng.step()
+    assert eng.num_host_syncs - before == 2 * len(groups)
+
+    # host-cache reads never sync
+    eng.free_slots(), eng.has_active()
+    assert eng.num_host_syncs - before == 2 * len(groups)
+
+    # drain: every step syncs once per active group; a harvesting step
+    # adds exactly one pull per group with >= 1 finishing request (two
+    # requests finishing together in one group still cost ONE pull)
+    before, steps, pulls = eng.num_host_syncs, 0, 0
+    finished = []
+    while eng.has_active():
+        active = sum(1 for g in eng.groups if np.any(g.status & 1))
+        done = eng.step()
+        steps += active
+        pulls += len({f.policy for f in done})
+        finished += done
+    assert len(finished) == 2 + (len(groups) - 1)
+    assert eng.num_host_syncs - before == steps + pulls
+
+
 def test_bpd_iteration_active_mask_freezes_rows():
     """Direct unit check of the decode.py refactor: an inactive row accepts
     nothing and keeps its state bit-for-bit."""

@@ -1,8 +1,11 @@
-"""Unit tests for the verification criteria (paper §3, §5.1–§5.3)."""
+"""Unit tests for the verification criteria (paper §3, §5.1–§5.3),
+including hypothesis property tests over all three acceptors (skipped on
+minimal installs via the tests/_hyp.py shim)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st
 from repro.config import DecodeConfig
 from repro.core.verify import accepted_block_size, position_accepts
 
@@ -87,3 +90,93 @@ def test_khat_at_least_one(criterion):
     acc = position_accepts(props, logits, dec)
     khat = accepted_block_size(acc, dec, jnp.full((8,), 100))
     assert np.all(np.asarray(khat) >= 1) and np.all(np.asarray(khat) <= 6)
+
+
+# ---------------------------------------------------------------------------
+# Property tests over the three acceptors (hypothesis; skip when absent)
+# ---------------------------------------------------------------------------
+
+CRITERIA = ("exact", "topk", "distance")
+
+
+def _random_verify_case(seed, b=4, k=5, vocab=17):
+    rng = np.random.default_rng(seed)
+    props = jnp.asarray(rng.integers(0, vocab, (b, k)), jnp.int32)
+    logits = jnp.asarray(rng.normal(size=(b, k, vocab)), jnp.float32)
+    return props, logits
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), crit=st.sampled_from(CRITERIA))
+def test_accepted_prefix_is_prefix_of_draft(seed, crit):
+    """For every acceptor, the committed block is a PREFIX of the draft:
+    k̂ counts accepted positions from the left with no holes, every
+    position below k̂ was individually accepted, and 1 <= k̂ <= k."""
+    props, logits = _random_verify_case(seed)
+    dec = DecodeConfig(criterion=crit, top_k=2, epsilon=2.0)
+    acc = np.asarray(position_accepts(props, logits, dec))
+    khat = np.asarray(accepted_block_size(acc, dec, jnp.full((4,), 100)))
+    k = props.shape[1]
+    assert np.all(khat >= 1) and np.all(khat <= k)
+    for i in range(acc.shape[0]):
+        # positions inside the accepted block were all accepted...
+        assert acc[i, :khat[i]].all(), (i, acc[i], khat[i])
+        # ...and k̂ is the LONGEST such prefix (min_block=1): the next
+        # position, if any, was rejected
+        if khat[i] < k:
+            assert not acc[i, khat[i]], (i, acc[i], khat[i])
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_exact_acceptance_implies_token_equality(seed):
+    """ExactAcceptor semantics (§3): an accepted candidate position i >= 1
+    IS the verifier's greedy token at the slot that checks it — exact
+    acceptance can never commit a token greedy decoding would not."""
+    props, logits = _random_verify_case(seed)
+    acc = np.asarray(position_accepts(props, logits,
+                                      DecodeConfig(criterion="exact")))
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))   # (B, k)
+    p = np.asarray(props)
+    b, k = p.shape
+    assert acc[:, 0].all()                              # k̂ >= 1 by contract
+    for i in range(b):
+        for j in range(1, k):                           # slot j-1 checks j
+            assert acc[i, j] == (p[i, j] == greedy[i, j - 1])
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), k_lo=st.integers(1, 6),
+       k_hi=st.integers(1, 6))
+def test_khat_monotone_under_tightened_topk(seed, k_lo, k_hi):
+    """Tightening the §5.1 top-k threshold never grows k̂ (and the
+    per-position accepts shrink as a set)."""
+    props, logits = _random_verify_case(seed)
+    lo, hi = min(k_lo, k_hi), max(k_lo, k_hi)
+    rem = jnp.full((4,), 100)
+    d_lo = DecodeConfig(criterion="topk", top_k=lo)
+    d_hi = DecodeConfig(criterion="topk", top_k=hi)
+    acc_lo = np.asarray(position_accepts(props, logits, d_lo))
+    acc_hi = np.asarray(position_accepts(props, logits, d_hi))
+    assert np.all(~acc_lo | acc_hi)                    # accepts: subset
+    khat_lo = np.asarray(accepted_block_size(acc_lo, d_lo, rem))
+    khat_hi = np.asarray(accepted_block_size(acc_hi, d_hi, rem))
+    assert np.all(khat_lo <= khat_hi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), e1=st.floats(0.0, 8.0),
+       e2=st.floats(0.0, 8.0))
+def test_khat_monotone_under_tightened_distance(seed, e1, e2):
+    """Tightening the §5.2 distance tolerance never grows k̂."""
+    props, logits = _random_verify_case(seed)
+    lo, hi = min(e1, e2), max(e1, e2)
+    rem = jnp.full((4,), 100)
+    d_lo = DecodeConfig(criterion="distance", epsilon=lo)
+    d_hi = DecodeConfig(criterion="distance", epsilon=hi)
+    acc_lo = np.asarray(position_accepts(props, logits, d_lo))
+    acc_hi = np.asarray(position_accepts(props, logits, d_hi))
+    assert np.all(~acc_lo | acc_hi)
+    khat_lo = np.asarray(accepted_block_size(acc_lo, d_lo, rem))
+    khat_hi = np.asarray(accepted_block_size(acc_hi, d_hi, rem))
+    assert np.all(khat_lo <= khat_hi)
