@@ -22,6 +22,13 @@ baseline runs of the same workload — gated (in --smoke) to within 10% of
 that baseline's tokens/sec with exactly one compile per group function;
 the row lands in ``BENCH_serve.json`` as the ``mixed_*`` fields.
 
+A fourth, **paged-KV** row reruns the engine workload with
+``cache_backend="paged"`` and sweeps slots-vs-HBM via the cache backends'
+``memory_bytes``: the ``paged_*`` fields record how many paged slots fit
+the dense engine's cache budget (gated >= 4x, worst-case pool with no
+prefix-sharing credit) and the equal-slot-count throughput (gated within
+10% of dense in --smoke).
+
 Device-work accounting is symmetric: ``model_calls`` counts jitted
 forward executions over the full batch width — prefill + decode
 iterations per static batch, admits + engine steps for the engine — so
@@ -258,12 +265,53 @@ def run(smoke: bool = False, requests: int = 48, slots: int = 8,
     mixed_stats = run_engine(params, cfg, dec, mixed_ecfg, mixed_reqs,
                              policies=groups)
 
+    # paged KV cache rows: the memory claim (how many concurrent slots fit
+    # in the dense engine's HBM budget) and the throughput claim (paged is
+    # not slower at the same slot count — it is a layout change, not a
+    # compute change).  Memory is measured with the backends' own
+    # ``memory_bytes`` (eval_shape over the real init, so block tables,
+    # position maps and the trash page are all accounted), with the paged
+    # pool at its worst case (no prefix sharing: every slot holds its full
+    # page span).
+    from repro.models import cache as cache_lib
+
+    decp = dec.replace(cache_backend="paged", page_size=8)
+    prefix = cfg.num_meta_tokens
+    context_len = prefix + ecfg.max_prompt_len + ecfg.max_new_cap
+    P = cache_lib.pages_per_row(context_len, dec.block_k, decp.page_size)
+
+    def _dense_bytes(s):
+        return cache_lib.DenseBackend().memory_bytes(
+            cfg, s, context_len, dec.block_k)
+
+    def _paged_bytes(s):
+        be = cache_lib.PagedBackend(decp.page_size, num_pages=1 + s * P,
+                                    managed=True)
+        return be.memory_bytes(cfg, s, context_len, dec.block_k)
+
+    hbm_budget = _dense_bytes(slots)
+    paged_slots = slots
+    while (paged_slots < 64 * slots
+           and _paged_bytes(paged_slots + 1) <= hbm_budget):
+        paged_slots += 1
+    paged_stats = run_engine(params, cfg, decp, ecfg, reqs)
+
     return {
         "config": {"requests": requests, "slots": slots, "rate": rate,
                    "budgets": list(budgets), "model": cfg.name,
                    "smoke": smoke, "mixed_groups": groups,
-                   "mixed_requests": mixed_n},
+                   "mixed_requests": mixed_n,
+                   "page_size": decp.page_size, "pages_per_row": P},
         "engine": engine_stats,
+        "paged": paged_stats,
+        "paged_slots_at_equal_hbm": paged_slots,
+        "paged_slots_ratio": paged_slots / slots,
+        "dense_cache_bytes": hbm_budget,
+        "dense_cache_bytes_per_slot": hbm_budget / slots,
+        "paged_cache_bytes_at_equal_slots": _paged_bytes(slots),
+        "paged_vs_dense_tokens_per_sec": (
+            paged_stats["tokens_per_sec"]
+            / max(engine_stats["tokens_per_sec"], 1e-9)),
         "static": static_stats,
         "single_base": single_base_stats,
         "single_base_policy": best_name,
@@ -322,6 +370,38 @@ def main():
         raise SystemExit(f"RECOMPILATION REGRESSION (mixed-policy): engine "
                          f"jit cache sizes {mcc} (expected 1 each)")
     print(f"serve/mixed/compile_counts,{mcc},ok")
+
+    # paged-KV gates: the layout must buy >= 4x the concurrent slots inside
+    # the dense engine's HBM budget (worst-case pool, no prefix sharing
+    # credited), serve the same workload within 10% of dense tokens/sec at
+    # equal slot count, and never recompile under traffic
+    print(f"serve/paged/tokens_per_sec,{res['paged']['tokens_per_sec']},")
+    print(f"serve/paged_slots_at_equal_hbm,{res['paged_slots_at_equal_hbm']},"
+          f"dense_slots={res['config']['slots']}")
+    print(f"serve/paged_vs_dense_tokens_per_sec,"
+          f"{res['paged_vs_dense_tokens_per_sec']:.3f},equal_slot_count")
+    pcc = res["paged"]["compile_counts"]
+    if any(v != 1 for v in pcc.values()):
+        raise SystemExit(f"RECOMPILATION REGRESSION (paged): engine jit "
+                         f"cache sizes {pcc} (expected 1 each)")
+    print(f"serve/paged/compile_counts,{pcc},ok")
+    if res["paged_slots_ratio"] < 4.0:
+        raise SystemExit(
+            f"PAGED MEMORY REGRESSION: only {res['paged_slots_at_equal_hbm']}"
+            f" paged slots fit the dense {res['config']['slots']}-slot HBM "
+            f"budget ({res['paged_slots_ratio']:.2f}x, need >= 4x): "
+            f"{res['dense_cache_bytes_per_slot']:.0f} B/slot dense vs "
+            f"{res['paged_cache_bytes_at_equal_slots'] / res['config']['slots']:.0f}"
+            f" B/slot paged")
+    if args.smoke and res["paged_vs_dense_tokens_per_sec"] < 0.9:
+        raise SystemExit(
+            f"PAGED THROUGHPUT REGRESSION: "
+            f"{res['paged']['tokens_per_sec']:.1f} tok/s is "
+            f"{res['paged_vs_dense_tokens_per_sec']:.2f}x dense "
+            f"({res['engine']['tokens_per_sec']:.1f} tok/s) on the same "
+            f"workload at equal slot count; the paged layout must cost "
+            f"< 10%")
+
     if args.smoke and res["mixed_vs_best_single"] < 0.9:
         raise SystemExit(
             f"MIXED-POLICY THROUGHPUT REGRESSION: "
@@ -359,6 +439,14 @@ def main():
         "mixed_policy_groups": res["config"]["mixed_groups"],
         "mixed_per_policy_tokens": res["mixed"]["per_policy_tokens"],
         "mixed_compile_counts": mcc,
+        "paged_tokens_per_sec": res["paged"]["tokens_per_sec"],
+        "paged_vs_dense_tokens_per_sec": res["paged_vs_dense_tokens_per_sec"],
+        "paged_slots_at_equal_hbm": res["paged_slots_at_equal_hbm"],
+        "paged_slots_ratio": res["paged_slots_ratio"],
+        "paged_dense_cache_bytes_per_slot": res["dense_cache_bytes_per_slot"],
+        "paged_cache_bytes_at_equal_slots":
+            res["paged_cache_bytes_at_equal_slots"],
+        "paged_compile_counts": pcc,
         "config": res["config"],
     }
     with open(os.path.join(REPO_ROOT, "BENCH_serve.json"), "w") as f:

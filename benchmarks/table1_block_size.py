@@ -59,12 +59,12 @@ def run(ks=(2, 4, 6, 8), *, pretrain_steps=700, head_steps=500,
                                       steps=head_steps, freeze=freeze,
                                       distilled=data)
             dec = DecodeConfig(max_new_tokens=bench.tgt_len, block_k=k,
-                               criterion="exact")
+                               policy="exact")
             res = eval_mt(bench, cfg_k, params_k, dec=dec)
             results[f"{setting}_k{k}"] = res
             if setting == "both":
                 for topk in (2, 3):
-                    deck = dec.replace(criterion="topk", top_k=topk)
+                    deck = dec.replace(policy="topk", top_k=topk)
                     results[f"both_top{topk}_k{k}"] = eval_mt(
                         bench, cfg_k, params_k, dec=deck)
             if verbose:

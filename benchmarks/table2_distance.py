@@ -82,7 +82,7 @@ def run(ks=(2, 4, 6, 8), *, levels=64, pretrain_steps=700, head_steps=500,
             approx = setting in ("approximate", "both")
             dec = DecodeConfig(
                 max_new_tokens=32, block_k=k,
-                criterion="distance" if approx else "exact",
+                policy="distance" if approx else "exact",
                 epsilon=epsilon if approx else 0.0)
             res = _eval(cfg_k, params_k, task, dec)
             results[f"{setting}_k{k}"] = res

@@ -168,6 +168,8 @@ class DecodeConfig:
     min_block: int = 1             # §5.3 minimum accepted block size
     eos_id: int = -1               # -1: decode for max_new_tokens (image-style)
     temperature: float = 0.0       # 0 = greedy (paper setting)
+    cache_backend: str = "dense"   # dense | paged (models.cache.get_backend)
+    page_size: int = 16            # tokens per KV page (paged backend only)
 
     def replace(self, **kw) -> "DecodeConfig":
         return dataclasses.replace(self, **kw)

@@ -49,6 +49,20 @@ def get_policy(dec, policy=None):
 
     ``policy`` may be a registered name, a ``DecodePolicy`` object, or None
     (fall back to ``dec.policy``, then the legacy ``dec.criterion`` alias).
+
+    This is the blessed construction path for decode policies::
+
+        dec = DecodeConfig(policy="topk", top_k=2, block_k=8)
+        pol = get_policy(dec)              # DecodePolicy object
+        acc = pol.acceptor.accepts(proposals, p1_logits)
+        khat, sched_state = pol.schedule.block_size(acc, remaining, state)
+
+    Set ``DecodeConfig.policy`` to a registered name (``list_policies()``)
+    and parameterize through the config fields (``top_k``, ``epsilon``,
+    ``min_block`` …); pass a hand-built ``DecodePolicy`` object only for
+    combinations the registry doesn't name.  The criterion-string shims in
+    ``repro.core.verify`` (``position_accepts`` / ``accepted_block_size``)
+    are deprecated and warn — don't add new call sites.
     """
     from repro.core.policy import resolve_policy
 

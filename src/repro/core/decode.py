@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro.config import DecodeConfig, ModelConfig
 from repro.core import policy as policy_lib
 from repro.core.policy import DecodePolicy, DraftInputs, PolicyState
+from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.models import seq2seq as seq2seq_lib
 from repro.models.layers import embed_apply
@@ -249,7 +250,10 @@ def bpd_prefill_causal_lm(params, cfg: ModelConfig, dec: DecodeConfig,
     b, prompt_len = prompt.shape
     prefix = model_lib.prefix_len(cfg, batch)
     context_len = prefix + prompt_len + max_new
-    caches = model_lib.init_caches(cfg, b, context_len, block_k)
+    # dec.cache_backend selects the KV layout; run-to-completion decode
+    # uses the identity-mapped (allocator-free) paged pool
+    caches = model_lib.init_caches(cfg, b, context_len, block_k,
+                                   backend=cache_lib.get_backend(dec))
 
     h = model_lib.embed_inputs(params, cfg, batch)          # (B, prefix+P, d)
     positions = jnp.arange(h.shape[1], dtype=jnp.int32)
@@ -510,7 +514,8 @@ def _greedy_decode_impl(params, cfg: ModelConfig, dec: DecodeConfig,
     b, prompt_len = prompt.shape
     prefix = model_lib.prefix_len(cfg, batch)
     context_len = prefix + prompt_len + max_new
-    caches = model_lib.init_caches(cfg, b, context_len, 1)
+    caches = model_lib.init_caches(cfg, b, context_len, 1,
+                                   backend=cache_lib.get_backend(dec))
 
     h = model_lib.embed_inputs(params, cfg, batch)
     positions = jnp.arange(h.shape[1], dtype=jnp.int32)

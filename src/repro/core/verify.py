@@ -1,10 +1,14 @@
 """Verification criteria (paper §3 exact match, §5.1 top-k, §5.2 distance,
-§5.3 minimum block size) — legacy functional entry points.
+§5.3 minimum block size) — legacy functional entry points, DEPRECATED.
 
 The implementations live in ``core.policy`` as first-class ``Acceptor`` /
 ``BlockSchedule`` objects; these wrappers keep the original
 criterion-string API (and the seed tests) working by resolving
-``dec.criterion`` through the policy registry.
+``dec.criterion`` through the policy registry.  New code should construct
+a ``DecodePolicy`` via ``repro.config.get_policy(dec)`` (see its docstring
+for the blessed path) and call ``policy.acceptor.accepts(...)`` /
+``policy.schedule.block_size(...)`` directly — both wrappers below emit a
+``DeprecationWarning``.
 
 Index convention for one BPD iteration (0-based within the block):
   * ``proposals[:, i]`` is the token proposed for absolute position j+1+i.
@@ -17,6 +21,8 @@ Index convention for one BPD iteration (0-based within the block):
 """
 from __future__ import annotations
 
+import warnings
+
 import jax.numpy as jnp
 
 from repro.config import DecodeConfig
@@ -27,10 +33,18 @@ def position_accepts(proposals: jnp.ndarray, p1_logits: jnp.ndarray,
                      dec: DecodeConfig) -> jnp.ndarray:
     """Per-position acceptance decisions (before the prefix AND).
 
+    .. deprecated:: use ``get_policy(dec).acceptor.accepts(proposals,
+       p1_logits)`` — the criterion-string shim will be removed.
+
     proposals : (B, k) int32
     p1_logits : (B, k, V) — p_1 logits at block slots 0..k-1
     returns   : (B, k) bool; column 0 is always True.
     """
+    warnings.warn(
+        "repro.core.verify.position_accepts is deprecated; resolve a "
+        "DecodePolicy (repro.config.get_policy) and call "
+        "policy.acceptor.accepts(proposals, p1_logits)",
+        DeprecationWarning, stacklevel=2)
     return resolve_policy(dec).acceptor.accepts(proposals, p1_logits)
 
 
@@ -39,8 +53,16 @@ def accepted_block_size(accepts: jnp.ndarray, dec: DecodeConfig,
     """k̂ per row: longest accepted prefix, with §5.3 minimum block size,
     clamped to the tokens still allowed (``remaining``, (B,) int32).
 
+    .. deprecated:: use ``get_policy(dec).schedule.block_size(accepts,
+       remaining, state)`` — the criterion-string shim will be removed.
+
     accepts: (B, k) bool -> (B,) int32 in [1, k] (before remaining clamp).
     """
+    warnings.warn(
+        "repro.core.verify.accepted_block_size is deprecated; resolve a "
+        "DecodePolicy (repro.config.get_policy) and call "
+        "policy.schedule.block_size(accepts, remaining, state)",
+        DeprecationWarning, stacklevel=2)
     khat, _ = StaticSchedule(min_block=dec.min_block).block_size(
         accepts, remaining, ())
     return khat

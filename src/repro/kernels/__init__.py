@@ -1,8 +1,10 @@
 """Pallas TPU kernels for the BPD serving hot spots (+ pure-jnp oracles).
 
-  * ``block_attention`` — k-query verify attention vs a long KV cache
-  * ``rwkv6_scan``      — chunked RWKV-6 wkv linear-attention scan
-  * ``fused_heads``     — streaming head-logits top-T (no k×V materialization)
+  * ``block_attention``  — k-query verify attention vs a long KV cache
+  * ``paged_attention``  — same verify substep over a paged KV pool
+                           (block-table gather via scalar prefetch)
+  * ``rwkv6_scan``       — chunked RWKV-6 wkv linear-attention scan
+  * ``fused_heads``      — streaming head-logits top-T (no k×V materialization)
 
 ``ops`` holds the jit'd wrappers (interpret mode on CPU); ``ref`` the
 oracles used by the per-kernel shape/dtype sweep tests.
@@ -10,6 +12,7 @@ oracles used by the per-kernel shape/dtype sweep tests.
 from repro.kernels import ops, ref  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
     fused_heads_topk,
+    paged_verify_attention,
     rwkv6_scan,
     verify_attention,
 )

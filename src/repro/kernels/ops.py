@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels.block_attention import verify_attention_pallas
 from repro.kernels.fused_heads import fused_heads_topk_pallas
+from repro.kernels.paged_attention import paged_verify_attention_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
 
 
@@ -31,6 +32,17 @@ def verify_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
     return verify_attention_pallas(q, k, v, q_pos, kv_pos, window=window,
                                    num_meta=num_meta, block_kv=block_kv,
                                    interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "num_meta",
+                                             "interpret"))
+def paged_verify_attention(q, kp, vp, tbl, q_pos, kv_pos, *, window: int = 0,
+                           num_meta: int = 0, interpret: bool | None = None):
+    """BPD verify attention over a paged KV pool (see kernels.paged_attention)."""
+    interp = (not on_tpu()) if interpret is None else interpret
+    return paged_verify_attention_pallas(q, kp, vp, tbl, q_pos, kv_pos,
+                                         window=window, num_meta=num_meta,
+                                         interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

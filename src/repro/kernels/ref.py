@@ -37,6 +37,23 @@ def verify_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
 
 
 # ---------------------------------------------------------------------------
+# paged_attention oracle
+# ---------------------------------------------------------------------------
+
+
+def paged_verify_attention(q, kp, vp, tbl, q_pos, kv_pos, *, window: int = 0,
+                           num_meta: int = 0) -> jnp.ndarray:
+    """q: (B, kq, H, hd); kp/vp: (num_pages, ps, KV, hd); tbl: (B, P);
+    kv_pos: (B, P*ps).  Gather the pages densely, then the dense oracle."""
+    b, P = tbl.shape
+    _, ps, kvh, hd = kp.shape
+    k = kp[tbl].reshape(b, P * ps, kvh, hd)
+    v = vp[tbl].reshape(b, P * ps, kvh, hd)
+    return verify_attention(q, k, v, q_pos, kv_pos, window=window,
+                            num_meta=num_meta)
+
+
+# ---------------------------------------------------------------------------
 # rwkv6_scan oracle (sequential recurrence, f32)
 # ---------------------------------------------------------------------------
 

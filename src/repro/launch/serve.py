@@ -6,7 +6,13 @@ blockwise parallel decoding.
         [--criterion topk --top-k 2] [--policy topk_tree] [--sched sjf] \
         [--policy draft_model --draft-arch granite-3-8b \
          --draft-ckpt /tmp/draft-ckpt] \
-        [--engine --policies exact=2,topk_tree=2]
+        [--engine --policies exact=2,topk_tree=2] \
+        [--cache-backend paged --page-size 16]
+
+``--cache-backend paged`` swaps the dense per-slot KV rows for the paged
+cache (fixed-size pages, per-slot block tables, CoW prefix sharing); in
+engine mode admissions allocate pages from a shared pool and identical
+prompt prefixes are stored once.  Token-identical to dense.
 
 ``--policy`` selects the SESSION-DEFAULT decode policy (drafter ×
 acceptor × block schedule, see README "Decode policies"); unset, the
@@ -65,11 +71,20 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--block-k", type=int, default=0)
     ap.add_argument("--criterion", default="exact",
-                    choices=["exact", "topk", "distance"])
+                    choices=["exact", "topk", "distance"],
+                    help="legacy alias for --policy (the three acceptor "
+                         "names are registered policies); prefer --policy")
     ap.add_argument("--policy", default="",
                     help="decode policy name (drafter × acceptor × "
                          "schedule; see repro.config.list_policies()); "
                          "empty = the --criterion legacy alias")
+    ap.add_argument("--cache-backend", default="dense",
+                    choices=["dense", "paged"],
+                    help="KV cache layout: dense per-slot rows, or paged "
+                         "(fixed-size pages + block tables + CoW prefix "
+                         "sharing; engine mode allocates pages per request)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (multiple of 8; paged only)")
     ap.add_argument("--top-k", type=int, default=2)
     ap.add_argument("--epsilon", type=float, default=2.0)
     ap.add_argument("--draft-arch", default=None,
@@ -107,10 +122,14 @@ def main():
         print(f"[serve] restored step {latest_step(args.ckpt_dir)} "
               f"({extra.get('arch')})")
 
+    # --criterion is resolved here to a registered policy name so the
+    # deprecated criterion-string fallback never fires downstream
     dec = DecodeConfig(max_new_tokens=args.max_new,
                        block_k=args.block_k or cfg.bpd_k,
-                       criterion=args.criterion, policy=args.policy,
-                       top_k=args.top_k, epsilon=args.epsilon)
+                       policy=args.policy or args.criterion,
+                       top_k=args.top_k, epsilon=args.epsilon,
+                       cache_backend=args.cache_backend,
+                       page_size=args.page_size)
     task = MarkovLM(vocab=min(cfg.vocab_size, 256), temperature=0.2,
                     seed=args.seed)
     prompts = jnp.asarray(task.sample(np.random.default_rng(args.seed + 1),

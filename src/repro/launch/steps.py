@@ -25,6 +25,7 @@ from repro.config import INPUT_SHAPES, DecodeConfig, ModelConfig, TrainConfig
 from repro.core import decode as decode_lib
 from repro.core.policy import resolve_policy
 from repro.core.train import loss_fn_for
+from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.optim import optimizer_init, optimizer_update
 
@@ -148,7 +149,8 @@ def serve_state_struct(cfg: ModelConfig, dec: DecodeConfig, *, batch: int,
     pol = resolve_policy(dec)
 
     def mk():
-        caches = model_lib.init_caches(cfg, batch, seq_len + max_new, block_k)
+        caches = model_lib.init_caches(cfg, batch, seq_len + max_new, block_k,
+                                       backend=cache_lib.get_backend(dec))
         text_cap = seq_len - prefix + max_new + block_k
         return decode_lib.BPDState(
             tokens=jnp.zeros((batch, text_cap), I32),

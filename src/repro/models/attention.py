@@ -205,11 +205,57 @@ def _reserved_slots(cfg: ModelConfig, layer_idx: int, buf_len: int) -> int:
     return cfg.num_meta_tokens if window else 0
 
 
+def _paged_cache_write(cache: Dict, k, v, positions) -> Dict:
+    """Scatter K/V through the block table into the page pool.
+
+    Paged layers are always full-attention (windowed layers stay dense), so
+    the slot assignment is the identity: position p lives in logical page
+    ``p // page_size``, offset ``p % page_size``, and the block table maps
+    logical to physical pages per row.  Rows whose table entry is 0 (trash
+    page — evicted slots, unmapped tail pages) write harmlessly into page 0;
+    its contents are never visible because the corresponding ``pos`` lanes
+    mask out of every attention.
+    """
+    kp, vp, tbl = cache["kp"], cache["vp"], cache["tbl"]
+    num_pages, ps, kvh, hd = kp.shape
+    b = tbl.shape[0]
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :],
+                                     (b, positions.shape[0]))
+    positions = positions.astype(jnp.int32)
+    s = positions.shape[1]
+    phys = tbl[jnp.arange(b)[:, None], positions // ps] * ps + positions % ps
+    new = dict(cache)
+    new["kp"] = kp.reshape(num_pages * ps, kvh, hd).at[phys.reshape(-1)].set(
+        k.reshape(b * s, kvh, hd).astype(kp.dtype)).reshape(kp.shape)
+    new["vp"] = vp.reshape(num_pages * ps, kvh, hd).at[phys.reshape(-1)].set(
+        v.reshape(b * s, kvh, hd).astype(vp.dtype)).reshape(vp.shape)
+    new["pos"] = jax.vmap(lambda buf, slot, val: buf.at[slot].set(val))(
+        cache["pos"], positions, positions)
+    return new
+
+
+def cache_kv_view(cache: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The (B, L, KV, hd) K/V arrays attention scores against — a direct
+    reference for dense layers, a page gather for paged layers (the jnp
+    path; ``kernels/paged_attention.py`` streams pages instead on TPU)."""
+    if "kp" in cache:
+        kp, vp, tbl = cache["kp"], cache["vp"], cache["tbl"]
+        _, ps, kvh, hd = kp.shape
+        b, P = tbl.shape
+        return (kp[tbl].reshape(b, P * ps, kvh, hd),
+                vp[tbl].reshape(b, P * ps, kvh, hd))
+    return cache["k"], cache["v"]
+
+
 def cache_write(cache: Dict, cfg: ModelConfig, layer_idx: int, k, v, positions) -> Dict:
-    """Scatter post-RoPE K/V for ``positions`` into the ring buffer.
+    """Scatter post-RoPE K/V for ``positions`` into the ring buffer (dense)
+    or through the block table (paged).
 
     positions: (S,) shared across rows (prefill) or (B, S) per-row (decode).
     """
+    if "kp" in cache:
+        return _paged_cache_write(cache, k, v, positions)
     buf_len = cache["k"].shape[1]
     b = cache["k"].shape[0]
     nres = _reserved_slots(cfg, layer_idx, buf_len)
@@ -266,15 +312,16 @@ def attn_cached(p, cfg: ModelConfig, x_block, cache: Dict, length, *,
     window = 0 if layer_idx in cfg.global_attn_layers else cfg.sliding_window
     kv_pos = cache["pos"]                                          # (B, L)
     kv_pos = jnp.where(kv_pos < (length + kblk)[:, None], kv_pos, -1)
+    ck, cv = cache_kv_view(cache)
     if kv_chunk:
-        ctx = _chunked_attend(q, cache["k"], cache["v"], positions, kv_pos,
+        ctx = _chunked_attend(q, ck, cv, positions, kv_pos,
                               window=window, num_meta=cfg.num_meta_tokens,
                               bidirectional=False,
                               head_dim=cfg.resolved_head_dim, chunk=kv_chunk)
     else:
         mask = make_causal_mask(positions, kv_pos, window=window,
                                 num_meta=cfg.num_meta_tokens)       # (B, k, L)
-        ctx = _gqa_attend(q, cache["k"], cache["v"], mask,
+        ctx = _gqa_attend(q, ck, cv, mask,
                           head_dim=cfg.resolved_head_dim)
     return _out_proj(p, ctx), cache
 

@@ -87,13 +87,16 @@ def block_init(key, cfg: ModelConfig, layer_idx: int, *, dtype=jnp.float32,
 
 
 def block_cache_init(cfg: ModelConfig, layer_idx: int, batch: int,
-                     context_len: int, block_k: int, dtype) -> Dict:
-    """Static cache buffers for one layer (decode path)."""
+                     context_len: int, block_k: int, dtype,
+                     backend: Optional[cache_lib.KVCacheBackend] = None) -> Dict:
+    """Static cache buffers for one layer (decode path).  ``backend``
+    (a ``cache.KVCacheBackend``) owns the attention-cache layout; None
+    means the dense default."""
     c: Dict = {}
-    hd = cfg.resolved_head_dim
     if cfg.block_type in ("attn", "hymba"):
-        buf = cache_lib.attn_buf_len(cfg, layer_idx, context_len, block_k)
-        c["attn"] = cache_lib.attn_cache_init(batch, buf, cfg.num_kv_heads, hd, dtype)
+        be = backend if backend is not None else cache_lib.DenseBackend()
+        c["attn"] = be.layer_attn_init(cfg, layer_idx, batch, context_len,
+                                       block_k, dtype)
     if cfg.block_type == "rwkv6":
         h = cfg.d_model // cfg.rwkv_head_dim
         c["tm"] = cache_lib.rwkv_cache_init(batch, cfg.d_model, h,

@@ -163,9 +163,13 @@ def commit_caches(cfg: ModelConfig, caches, khat):
 
 
 def init_caches(cfg: ModelConfig, batch: int, context_len: int, block_k: int,
-                dtype=None):
+                dtype=None, *, backend=None):
+    """``backend`` (a ``cache.KVCacheBackend``) selects the attention cache
+    layout — dense slabs (default) or the paged pool; recurrent caches are
+    layout-independent."""
     dtype = dtype or cfg.compute_dtype
-    return tuple(block_cache_init(cfg, i, batch, context_len, block_k, dtype)
+    return tuple(block_cache_init(cfg, i, batch, context_len, block_k, dtype,
+                                  backend=backend)
                  for i in range(cfg.num_layers))
 
 
@@ -175,15 +179,24 @@ def reset_cache_rows(caches, mask):
     return tuple(cache_lib.reset_rows(c, mask) for c in caches)
 
 
-def scatter_cache_row(caches, row_caches, slot, *, constraint=None):
+def scatter_cache_row(caches, row_caches, slot, *, constraint=None,
+                      tbl_row=None, write_mask=None):
     """Insert a batch-1 cache pytree into row ``slot`` of a batched cache —
     prefill-into-freed-slot for the continuous-batching serving engine.
     ``constraint`` optionally pins per-layer shardings (see cache.scatter_row)
-    so admission stays a shard-local write on a mesh."""
+    so admission stays a shard-local write on a mesh.  For paged layers
+    ``tbl_row`` / ``write_mask`` carry the host allocator's page mapping
+    (one mapping serves every layer — see cache.scatter_row_paged)."""
     if constraint is None:
         constraint = (None,) * len(caches)
-    return tuple(cache_lib.scatter_row(c, rc, slot, constraint=cn)
-                 for c, rc, cn in zip(caches, row_caches, constraint))
+    out = []
+    for c, rc, cn in zip(caches, row_caches, constraint):
+        if cache_lib.is_paged(c):
+            out.append(cache_lib.scatter_row_paged(
+                c, rc, slot, tbl_row, write_mask, constraint=cn))
+        else:
+            out.append(cache_lib.scatter_row(c, rc, slot, constraint=cn))
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------

@@ -61,11 +61,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import DecodeConfig, ModelConfig
+from repro.serving.pages import PageAllocator, PagePoolExhausted
 from repro.serving.session import DecodeSession, ServingFns
 from repro.serving.types import (EngineConfig, FinishedRequest, Request,
                                  SlotBatch)
 
-__all__ = ["ContinuousBatchingEngine", "PolicyGroup", "SlotBatch"]
+__all__ = ["ContinuousBatchingEngine", "PolicyGroup", "SlotBatch",
+           "PagePoolExhausted"]
 
 I32 = jnp.int32
 
@@ -85,6 +87,7 @@ class PolicyGroup:
     state: SlotBatch            # the group-local device state
     status: np.ndarray          # host mirror, (num_slots,) int8
     slot_meta: List[Optional[dict]]
+    pages: Optional[PageAllocator] = None  # host page allocator (paged only)
 
     def free_local(self) -> List[int]:
         """Group-local indices of free slots (host mirror, bit 0 clear) —
@@ -183,13 +186,22 @@ class ContinuousBatchingEngine:
             # DecodePolicy with the registry default of the same name
             pol_arg = None if policies is None else name
             fns = self.session.serving_fns(gecfg, policy=pol_arg)
+            # each group owns its page pool (its SlotBatch holds a separate
+            # kp/vp buffer), so the host allocator is per-group too
+            pages = None
+            if fns.paged is not None:
+                geom = fns.paged
+                pages = PageAllocator(geom.num_pages, geom.page_size,
+                                      geom.pages_per_row,
+                                      prefix_len=geom.prefix_len)
             self.groups.append(PolicyGroup(
                 gid=gid, name=name,
                 policy=self.session.bound_policy(pol_arg),
                 offset=offset, num_slots=slots, fns=fns,
                 state=fns.init(jnp.asarray(gid, I32)),
                 status=np.zeros((slots,), np.int8),
-                slot_meta=[None] * slots))
+                slot_meta=[None] * slots,
+                pages=pages))
             offset += slots
         self._by_name = {g.name: g for g in self.groups}
         self._rr = 0            # round-robin pointer over group steps
@@ -278,10 +290,18 @@ class ContinuousBatchingEngine:
         n_src = min(len(src_toks), self.ecfg.max_prompt_len)
         src[:n_src] = src_toks[:n_src]
         max_new = int(np.clip(req.max_new, 1, self.ecfg.max_new_cap))
+        extra = ()
+        if g.pages is not None:
+            # host-side page plan first: raises PagePoolExhausted (back-
+            # pressure, the scheduler requeues) before any device work, and
+            # reuses pooled pages for identical prompt prefixes (CoW)
+            tbl_row, write_mask = g.pages.plan_admit(
+                slot, req.prompt, p, max_new, self.block_k)
+            extra = (jnp.asarray(tbl_row), jnp.asarray(write_mask))
         g.state = g.fns.admit(
             self.params, self.aux_params, g.state, jnp.asarray(slot, I32),
             jnp.asarray(prompt), jnp.asarray(p, I32),
-            jnp.asarray(max_new, I32), jnp.asarray(src))
+            jnp.asarray(max_new, I32), jnp.asarray(src), *extra)
         g.status[slot] = 1          # known host-side: no readback needed
         self.num_admits += 1
         admit_time = time.monotonic() if now is None else now
@@ -356,6 +376,8 @@ class ContinuousBatchingEngine:
                     arrival=req.arrival, admit_time=meta["admit_time"],
                     finish_time=t, policy=g.name))
                 g.slot_meta[i] = None
+                if g.pages is not None:
+                    g.pages.release(int(i))
             g.state = g.fns.evict(g.state, jnp.asarray(done_mask))
             g.status[done_mask] = 0     # known host-side: freed, inactive
         return out

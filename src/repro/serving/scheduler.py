@@ -27,7 +27,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional
 
-from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.engine import ContinuousBatchingEngine, PagePoolExhausted
 from repro.serving.types import FinishedRequest, Request, percentile
 
 POLICIES = ("fcfs", "sjf")
@@ -95,7 +95,14 @@ class Scheduler:
                 req = self._pop_next(t, group=name)
                 if req is None:
                     break
-                self.engine.admit(req, now=now)
+                try:
+                    self.engine.admit(req, now=now)
+                except PagePoolExhausted:
+                    # back-pressure: the paged KV pool can oversubscribe the
+                    # slot slab — requeue and stop admitting to this group
+                    # until decode steps retire requests and free pages
+                    self.queue.append(req)
+                    break
         if not self.engine.has_active():
             return []
         done = self.engine.step(now=now)

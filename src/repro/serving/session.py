@@ -45,11 +45,23 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.config import DecodeConfig, ModelConfig
 from repro.core import decode as decode_lib
 from repro.core import policy as policy_lib
+from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.serving.types import EngineConfig, SlotBatch
 from repro.sharding import policy as sharding_policy
 
 I32 = jnp.int32
+
+
+class PagedGeometry(NamedTuple):
+    """Static page-pool geometry of a serving slot group — everything the
+    engine's host-side ``serving.pages.PageAllocator`` needs to mirror the
+    device block tables."""
+
+    page_size: int      # tokens per KV page
+    pages_per_row: int  # block-table width P
+    num_pages: int      # physical pool size (incl. trash page 0)
+    prefix_len: int     # model prefix (meta tokens) before the prompt
 
 
 def _structs(tree):
@@ -75,9 +87,12 @@ class ServingFns(NamedTuple):
     """
 
     init: Callable      # (gid) -> SlotBatch (mesh-placed when sharded)
-    admit: Callable     # (params, aux, state, slot, prompt, plen, max_new, src) -> state
+    admit: Callable     # (params, aux, state, slot, prompt, plen, max_new,
+                        #  src[, tbl_row, write_mask]) -> state — the two
+                        # trailing page-mapping args exist iff paged
     step: Callable      # (params, aux, state) -> (state, status (S,) int8)
     evict: Callable     # (state, mask) -> state
+    paged: Optional["PagedGeometry"] = None  # page-pool geometry (None=dense)
 
 
 class DecodeSession:
@@ -345,6 +360,21 @@ class DecodeSession:
             cfg, kv_chunk=self.kv_chunk)
         s = ecfg.num_slots
 
+        # KV-cache backend (dense slab vs managed page pool).  One host
+        # allocator per slot group drives the mapping for every layer, so
+        # the block-table geometry is computed here once.
+        paged_geom = None
+        if dec.cache_backend == "paged":
+            ps = dec.page_size
+            P_ = cache_lib.pages_per_row(context_len, block_k, ps)
+            pool = ecfg.page_pool_pages or (1 + s * P_)
+            kv_backend: cache_lib.KVCacheBackend = cache_lib.PagedBackend(
+                ps, num_pages=pool, managed=True)
+            paged_geom = PagedGeometry(page_size=ps, pages_per_row=P_,
+                                       num_pages=pool, prefix_len=prefix)
+        else:
+            kv_backend = cache_lib.get_backend(dec)
+
         def slots_batch(n: int) -> Dict:
             """Pseudo decode-entry batch for policy-state builders: the
             engine admits padded prompts, so drafters see a zeroed
@@ -364,7 +394,8 @@ class DecodeSession:
                 text_len=zeros(),
                 prompt_len=zeros(),
                 proposals=jnp.zeros((s, block_k), I32),
-                caches=model_lib.init_caches(cfg, s, context_len, block_k),
+                caches=model_lib.init_caches(cfg, s, context_len, block_k,
+                                             backend=kv_backend),
                 active=jnp.zeros((s,), bool),
                 finished=jnp.ones((s,), bool),  # empty slots read as finished
                 generated=zeros(),
@@ -383,15 +414,22 @@ class DecodeSession:
             cache_sh = slot_sh.caches
 
         def admit(params, aux, state: SlotBatch, slot, prompt, prompt_len,
-                  max_new, src) -> SlotBatch:
+                  max_new, src, tbl_row=None, write_mask=None) -> SlotBatch:
             """Prefill one padded prompt into row ``slot``.
 
             The single-row prefill is replicated work (batch 1 never splits
             the data axis); the writes into the slot batch are a global
             scatter constrained back to the slot shardings, so only the
             data shard owning ``slot`` mutates its rows.
+
+            Under the paged backend the prefill still runs on a dense
+            batch-1 workspace (page-aligned buffers, see
+            ``PagedBackend.row_init``); ``tbl_row`` ((P,) int32) and
+            ``write_mask`` ((P,) bool) are the host allocator's physical
+            mapping for this slot — copy-on-write prefix hits arrive with
+            ``write_mask=False`` and are left untouched in the pool.
             """
-            row_caches = model_lib.init_caches(cfg, 1, context_len, block_k)
+            row_caches = kv_backend.row_init(cfg, context_len, block_k)
             h = model_lib.embed_inputs(params, cfg, {"tokens": prompt[None]})
             positions = jnp.arange(h.shape[1], dtype=I32)
             hidden, _, row_caches = model_lib.forward_hidden(
@@ -429,7 +467,9 @@ class DecodeSession:
                 prompt_len=upd(state.prompt_len, prompt_len),
                 proposals=upd(state.proposals, proposals),
                 caches=model_lib.scatter_cache_row(state.caches, row_caches,
-                                                   slot, constraint=cache_sh),
+                                                   slot, constraint=cache_sh,
+                                                   tbl_row=tbl_row,
+                                                   write_mask=write_mask),
                 active=upd(state.active, True),
                 finished=upd(state.finished, False),
                 generated=upd(state.generated, 0),
@@ -481,19 +521,23 @@ class DecodeSession:
             return ServingFns(init=jax.jit(init_slots),
                               admit=jax.jit(admit),
                               step=jax.jit(step),
-                              evict=jax.jit(evict))
+                              evict=jax.jit(evict),
+                              paged=paged_geom)
 
         rep = NamedSharding(mesh, P())
         mask_sh = NamedSharding(mesh, P(sharding_policy.batch_axes(mesh, s)))
         aux_sh = self.aux_shardings
         state_dn = (2,) if self.donate else ()  # state follows (params, aux)
+        admit_in = (self.param_shardings, aux_sh, slot_sh, rep,
+                    rep, rep, rep, rep)
+        if paged_geom is not None:
+            admit_in = admit_in + (rep, rep)  # tbl_row, write_mask
         return ServingFns(
             init=self._with_mesh(jax.jit(init_slots, in_shardings=(rep,),
                                          out_shardings=slot_sh)),
             admit=self._with_mesh(jax.jit(
                 admit,
-                in_shardings=(self.param_shardings, aux_sh, slot_sh, rep,
-                              rep, rep, rep, rep),
+                in_shardings=admit_in,
                 out_shardings=slot_sh, donate_argnums=state_dn)),
             step=self._with_mesh(jax.jit(
                 step, in_shardings=(self.param_shardings, aux_sh, slot_sh),
@@ -502,4 +546,5 @@ class DecodeSession:
                 evict, in_shardings=(slot_sh, mask_sh),
                 out_shardings=slot_sh,
                 donate_argnums=(0,) if self.donate else ())),
+            paged=paged_geom,
         )

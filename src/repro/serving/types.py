@@ -57,13 +57,17 @@ class EngineConfig:
     num_slots: int = 4          # concurrent requests in the device batch
     max_prompt_len: int = 32    # prompts are padded to this for admission
     max_new_cap: int = 64       # hard per-request generation budget
+    page_pool_pages: int = 0    # paged backend: physical pages in the pool
+                                # (incl. the trash page); 0 = auto worst
+                                # case (1 + num_slots * pages_per_slot)
 
     def validate(self, dec=None, mesh=None) -> None:
         """Fail construction-time with a clear message instead of a
         downstream shape/trace error.
 
         dec  : optional DecodeConfig — ``max_new_cap`` must fit inside its
-               ``max_new_tokens`` loop bound.
+               ``max_new_tokens`` loop bound; its ``cache_backend`` /
+               ``page_size`` gate the page-pool geometry checks.
         mesh : optional jax Mesh — the slot batch shards over the data
                axes, so ``num_slots`` must split evenly across them.
         """
@@ -85,6 +89,31 @@ class EngineConfig:
                 f"DecodeConfig.max_new_tokens={dec.max_new_tokens}: the "
                 f"decode loop bound would truncate requests below their "
                 f"advertised budget")
+        if dec is not None and getattr(dec, "cache_backend", "dense") == "paged":
+            ps = dec.page_size
+            if ps <= 0 or ps % 8 != 0:
+                raise ValueError(
+                    f"DecodeConfig.page_size={ps} must be a positive "
+                    f"multiple of 8: KV pages tile the TPU sublane dim, and "
+                    f"a non-multiple fragments every page scatter/gather")
+            if self.page_pool_pages:
+                # lower bound on pages one max-size request maps (the true
+                # span adds the model prefix and decode block slack, which
+                # the session knows; validation uses what it can see)
+                per_slot = -(-(self.max_prompt_len + self.max_new_cap) // ps)
+                if self.page_pool_pages < 1 + per_slot:
+                    raise ValueError(
+                        f"EngineConfig.page_pool_pages={self.page_pool_pages}"
+                        f" cannot admit even one request: a max-size request "
+                        f"maps >= ceil((max_prompt_len + max_new_cap) / "
+                        f"page_size) = ceil(({self.max_prompt_len} + "
+                        f"{self.max_new_cap}) / {ps}) = {per_slot} pages, "
+                        f"plus the reserved trash page 0.  Raise "
+                        f"page_pool_pages to at least {1 + per_slot} (or to "
+                        f"1 + num_slots * pages_per_slot = "
+                        f"{1 + self.num_slots * per_slot} to rule out "
+                        f"admission back-pressure entirely; 0 auto-sizes to "
+                        f"the worst case)")
         if mesh is not None:
             from repro.sharding.policy import batch_axes, data_axis_size
 

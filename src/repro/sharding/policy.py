@@ -175,6 +175,18 @@ def cache_specs(cfg: ModelConfig, caches: Pytree, mesh: Mesh,
     kv_divides = cfg.num_kv_heads and cfg.num_kv_heads % msz == 0
 
     def spec(name: str, x) -> P:
+        if "/attn/" in name and name.endswith(("/kp", "/vp")):
+            # paged page pool: pages are shared across rows (CoW prefix
+            # reuse), so the pool NEVER shards over the data axes — it
+            # replicates there, trading the dense layout's data-parallel
+            # split for the much larger paging win.  kv-heads shard over
+            # model when they divide; the page-gather read path cannot
+            # length-shard, so the fallback is replication.
+            if kv_divides:
+                return _divisible(P(None, None, "model", None), x.shape, mesh)
+            return P()
+        if name.endswith("/tbl"):
+            return P(ax, None)
         if name.endswith("/pos"):
             if not kv_divides and x.ndim == 2 and x.shape[1] % msz == 0:
                 return P(ax, "model")

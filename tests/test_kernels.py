@@ -65,6 +65,86 @@ def test_verify_attention_masks_all_stale_rows():
 
 
 # ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+
+
+def _paged_case(b, kq, h, kv, hd, P, ps, num_pages, meta=0, share=False):
+    """A paged cache with random mapped prefixes; returns kernel inputs."""
+    q = _rand((b, kq, h, hd), jnp.float32)
+    kp = _rand((num_pages, ps, kv, hd), jnp.float32)
+    vp = _rand((num_pages, ps, kv, hd), jnp.float32)
+    # each row maps a random number of leading pages; the rest hit trash 0
+    tbl = np.zeros((b, P), np.int32)
+    kvpos = np.full((b, P * ps), -1, np.int32)
+    ctx = np.zeros(b, np.int64)
+    pool = list(range(1, num_pages))
+    for bi in range(b):
+        n = int(RNG.integers(1, P + 1))
+        for i in range(n):
+            if share and bi > 0 and i == 0:
+                tbl[bi, i] = tbl[0, 0]        # CoW: share row 0's first page
+            else:
+                tbl[bi, i] = pool.pop()
+        ctx[bi] = n * ps
+        kvpos[bi, :ctx[bi]] = np.arange(ctx[bi])
+    # stale a few speculative tail slots (BPD rollback)
+    for bi in range(b):
+        kvpos[bi, RNG.integers(0, ctx[bi], 2)] = -1
+    base = np.maximum(ctx - kq, meta)
+    qpos = jnp.asarray(base[:, None] + np.arange(kq)[None, :], jnp.int32)
+    return (q, jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(tbl), qpos,
+            jnp.asarray(kvpos))
+
+
+@pytest.mark.parametrize(
+    "b,kq,h,kv,hd,P,ps,num_pages,window,meta",
+    [
+        (1, 2, 4, 4, 16, 4, 8, 8, 0, 0),      # MHA, small pool
+        (2, 4, 8, 2, 32, 3, 16, 12, 0, 0),    # GQA
+        (1, 8, 6, 2, 64, 6, 8, 16, 32, 0),    # sliding window
+        (2, 4, 4, 1, 32, 4, 8, 16, 16, 4),    # MQA + meta tokens
+    ])
+def test_paged_attention_sweep(b, kq, h, kv, hd, P, ps, num_pages, window,
+                               meta):
+    q, kp, vp, tbl, qpos, kvpos = _paged_case(b, kq, h, kv, hd, P, ps,
+                                              num_pages, meta=meta)
+    got = ops.paged_verify_attention(q, kp, vp, tbl, qpos, kvpos,
+                                     window=window, num_meta=meta)
+    want = ref.paged_verify_attention(q, kp, vp, tbl, qpos, kvpos,
+                                      window=window, num_meta=meta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+def test_paged_attention_matches_dense_gather():
+    """Kernel over the paged pool == dense kernel over the gathered view —
+    the token-identity invariant the paged backend rests on."""
+    b, kq, h, kv, hd, P, ps = 2, 4, 4, 2, 32, 4, 8
+    q, kp, vp, tbl, qpos, kvpos = _paged_case(b, kq, h, kv, hd, P, ps,
+                                              num_pages=16)
+    got = ops.paged_verify_attention(q, kp, vp, tbl, qpos, kvpos)
+    kd = jnp.asarray(np.asarray(kp)[np.asarray(tbl)].reshape(b, P * ps, kv, hd))
+    vd = jnp.asarray(np.asarray(vp)[np.asarray(tbl)].reshape(b, P * ps, kv, hd))
+    want = ops.verify_attention(q, kd, vd, qpos, kvpos, block_kv=ps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+def test_paged_attention_cow_shared_page():
+    """Two rows sharing one physical prefix page read identical bytes."""
+    b, kq, h, kv, hd, P, ps = 2, 2, 2, 2, 16, 3, 8
+    q, kp, vp, tbl, qpos, kvpos = _paged_case(b, kq, h, kv, hd, P, ps,
+                                              num_pages=8, share=True)
+    assert int(tbl[0, 0]) == int(tbl[1, 0])   # the share actually happened
+    got = ops.paged_verify_attention(q, kp, vp, tbl, qpos, kvpos)
+    want = ref.paged_verify_attention(q, kp, vp, tbl, qpos, kvpos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
+    assert not bool(jnp.any(jnp.isnan(got)))
+
+
+# ---------------------------------------------------------------------------
 # rwkv6_scan
 # ---------------------------------------------------------------------------
 

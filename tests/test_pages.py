@@ -1,0 +1,241 @@
+"""Property tests for the paged-KV host allocator (serving/pages.py).
+
+Random admit/release traffic driven by hypothesis (skipped on minimal
+installs via the tests/_hyp.py shim) plus deterministic pins for the CoW
+prefix cache, rollback-on-exhaustion, and the error split between
+back-pressure (PagePoolExhausted) and never-satisfiable requests
+(ValueError).  ``check_invariants`` runs after every operation: no page is
+ever double-freed, lost, or held by two states at once.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.serving.pages import PageAllocator, PagePoolExhausted
+
+PS = 8  # page size for every case here
+
+
+def _mk(num_pages=12, P=4, prefix_len=0):
+    return PageAllocator(num_pages, PS, P, prefix_len=prefix_len)
+
+
+def _prompt(rng, n):
+    return rng.integers(1, 97, n)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic pins
+# ---------------------------------------------------------------------------
+
+
+def test_trash_page_never_allocated():
+    a = _mk()
+    rng = np.random.default_rng(0)
+    for slot in range(3):
+        tbl, _ = a.plan_admit(slot, _prompt(rng, 5), 5, 8)
+        assert 0 not in a.slot_pages[slot]
+        # unmapped tail entries point at trash 0, mapped ones never do
+        n = a.pages_needed(5, 8)
+        assert (tbl[:n] > 0).all() and (tbl[n:] == 0).all()
+    a.check_invariants()
+
+
+def test_release_returns_all_pages():
+    a = _mk()
+    rng = np.random.default_rng(1)
+    for slot in range(3):
+        a.plan_admit(slot, _prompt(rng, 6), 6, 10)
+    assert a.available_pages() < a.num_pages - 1
+    for slot in range(3):
+        a.release(slot)
+        a.check_invariants()
+    assert a.live_pages() == 0
+    assert a.available_pages() == a.num_pages - 1
+
+
+def test_release_unknown_slot_is_noop():
+    a = _mk()
+    assert a.release(7) == 0
+    a.check_invariants()
+
+
+def test_double_admit_same_slot_rejected():
+    a = _mk()
+    a.plan_admit(0, _prompt(np.random.default_rng(2), 4), 4, 4)
+    with pytest.raises(RuntimeError, match="already holds"):
+        a.plan_admit(0, _prompt(np.random.default_rng(3), 4), 4, 4)
+
+
+def test_cow_fork_shares_and_preserves_prefix_page():
+    """Identical prompts map the same physical prefix page; the second
+    admission must NOT rewrite it (write_mask False) — that is what keeps
+    the first request's prefix bytes intact on device."""
+    a = _mk()
+    rng = np.random.default_rng(4)
+    prompt = _prompt(rng, PS)  # exactly one shareable page
+    t0, w0 = a.plan_admit(0, prompt, PS, 4)
+    t1, w1 = a.plan_admit(1, prompt, PS, 4)
+    assert t0[0] == t1[0]
+    assert w0[0] and not w1[0]            # first writes, the fork must not
+    assert a.refcount[t0[0]] == 2
+    # a different prompt gets its own page
+    t2, w2 = a.plan_admit(2, _prompt(rng, PS), PS, 4)
+    assert t2[0] != t0[0] and w2[0]
+    a.check_invariants()
+
+
+def test_prefix_cache_survives_release_until_reclaimed():
+    a = _mk(num_pages=4, P=2)             # 3 allocatable pages
+    rng = np.random.default_rng(5)
+    prompt = _prompt(rng, PS)
+    t0, _ = a.plan_admit(0, prompt, PS, 4)
+    a.release(0)
+    assert a.live_pages() == 0
+    # the cached prefix is still a hit after release...
+    t1, w1 = a.plan_admit(1, prompt, PS, 4)
+    assert t1[0] == t0[0] and not w1[0]
+    a.release(1)
+    # ...until pool pressure reclaims it (LRU): drain the free list with
+    # one 2-page admission, then a 1-page admission must evict the cache
+    a.plan_admit(2, _prompt(rng, 3), 3, PS)         # takes both free pages
+    t3, w3 = a.plan_admit(3, _prompt(rng, 3), 3, 2)  # 1 page: reclaims
+    assert t3[0] == t0[0] and w3[0]       # reclaimed — now writable
+    assert not a.prefix_map               # its cache entry is gone
+    a.check_invariants()
+
+
+def test_exhaustion_rolls_back_and_raises():
+    a = _mk(num_pages=4, P=3)             # 3 allocatable pages
+    rng = np.random.default_rng(6)
+    a.plan_admit(0, _prompt(rng, 4), 4, 8)          # 2 pages
+    before = dict(a.refcount)
+    with pytest.raises(PagePoolExhausted):
+        a.plan_admit(1, _prompt(rng, 4), 4, 12)     # needs 2, only 1 left
+    assert a.refcount == before           # partial mapping rolled back
+    assert 1 not in a.slot_pages
+    a.check_invariants()
+    a.release(0)
+    a.plan_admit(1, _prompt(rng, 4), 4, 12)         # now it fits
+    a.check_invariants()
+
+
+def test_never_satisfiable_is_config_error_not_backpressure():
+    a = _mk(num_pages=4, P=8)
+    rng = np.random.default_rng(7)
+    # needs 5 pages; the pool only has 3 even when drained — admitting it
+    # later could never succeed, so this must not look like back-pressure
+    with pytest.raises(ValueError, match="page_pool_pages"):
+        a.plan_admit(0, _prompt(rng, 8), 8, 32)
+    with pytest.raises(ValueError, match="rows address only"):
+        _mk(num_pages=64, P=2).plan_admit(0, _prompt(rng, 8), 8, 32)
+
+
+def test_prefix_len_offsets_sharing():
+    """With a model prefix (meta tokens), a page is shareable only once the
+    *prompt* tokens under it are known — the first page covers prefix
+    positions plus the prompt's head."""
+    a = _mk(prefix_len=4)
+    rng = np.random.default_rng(8)
+    p1, p2 = _prompt(rng, 4), _prompt(rng, 4)
+    t0, _ = a.plan_admit(0, p1, 4, 4)     # prefix 4 + prompt 4 = page 0 full
+    t1, _ = a.plan_admit(1, p1, 4, 4)
+    t2, _ = a.plan_admit(2, p2, 4, 4)
+    assert t0[0] == t1[0] != t2[0]
+    a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random admit/release traffic
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), num_pages=st.integers(4, 24),
+       steps=st.integers(5, 40))
+def test_allocator_traffic_never_corrupts(seed, num_pages, steps):
+    """Arbitrary interleavings of admit (with prompt-dedup CoW) / release /
+    exhaustion keep every invariant: pages partition into free ∪ held ∪
+    reclaimable, refcounts equal slot multiplicity, and releasing
+    everything restores the whole pool."""
+    rng = np.random.default_rng(seed)
+    P = 4
+    a = PageAllocator(num_pages, PS, P, prefix_len=0)
+    prompts = [_prompt(rng, int(rng.integers(1, 2 * PS))) for _ in range(4)]
+    live, next_slot = [], 0
+    for _ in range(steps):
+        if live and rng.random() < 0.4:
+            a.release(live.pop(int(rng.integers(len(live)))))
+        else:
+            pr = prompts[int(rng.integers(len(prompts)))]
+            mn = int(rng.integers(1, 2 * PS))
+            if a.pages_needed(len(pr), mn) > min(P, num_pages - 1):
+                continue  # never-satisfiable: ValueError by design
+            try:
+                a.plan_admit(next_slot, pr, len(pr), mn)
+                live.append(next_slot)
+                next_slot += 1
+            except PagePoolExhausted:
+                assert next_slot not in a.slot_pages  # rolled back
+        a.check_invariants()
+    for s in live:
+        a.release(s)
+        a.check_invariants()
+    assert a.live_pages() == 0
+    assert a.available_pages() == a.num_pages - 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), plen=st.integers(1, 16),
+       prefix_len=st.integers(0, 6))
+def test_cow_fork_always_preserves_prefix_bytes(seed, plen, prefix_len):
+    """For every geometry: a fork of an identical prompt (1) shares every
+    shareable page, (2) never asks the device to rewrite a shared page
+    (write_mask False on hits — the bytes the first request wrote stay),
+    and (3) differing prompts never share."""
+    rng = np.random.default_rng(seed)
+    a = PageAllocator(32, PS, 6, prefix_len=prefix_len)
+    prompt = _prompt(rng, plen)
+    t0, w0 = a.plan_admit(0, prompt, plen, 4)
+    t1, w1 = a.plan_admit(1, prompt, plen, 4)
+    shareable = (np.arange(1, 7) * PS) <= prefix_len + plen  # per page i
+    n = a.pages_needed(plen, 4)
+    for i in range(n):
+        if shareable[i]:
+            assert t1[i] == t0[i] and not w1[i], i
+        else:
+            assert t1[i] != t0[i] and w1[i], i
+    # a prompt differing in its LAST token shares no page covering it
+    other = prompt.copy()
+    other[-1] = (other[-1] + 1) % 97
+    t2, _ = a.plan_admit(2, other, plen, 4)
+    covers_last = (np.arange(1, 7) * PS) > prefix_len + plen - 1
+    for i in range(n):
+        if shareable[i] and covers_last[i]:
+            assert t2[i] != t0[i], i
+    a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig page-pool geometry validation
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_rejects_bad_page_geometry():
+    from repro.config import DecodeConfig
+    from repro.serving.types import EngineConfig
+
+    dec = DecodeConfig(max_new_tokens=16, block_k=4, cache_backend="paged",
+                       page_size=6)
+    ecfg = EngineConfig(num_slots=2, max_prompt_len=8, max_new_cap=16)
+    with pytest.raises(ValueError, match="multiple of 8"):
+        ecfg.validate(dec)
+    dec = dec.replace(page_size=8)
+    ecfg.validate(dec)                    # auto pool: fine
+    # a pool too small for even one max-size request names the fix
+    tiny = EngineConfig(num_slots=2, max_prompt_len=8, max_new_cap=16,
+                        page_pool_pages=3)
+    with pytest.raises(ValueError, match="page_pool_pages to at least 4"):
+        tiny.validate(dec)
+    EngineConfig(num_slots=2, max_prompt_len=8, max_new_cap=16,
+                 page_pool_pages=4).validate(dec)   # exactly one request

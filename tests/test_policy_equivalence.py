@@ -232,6 +232,65 @@ def test_group_partition_validation(stack):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache backend: token identity with the dense references
+# ---------------------------------------------------------------------------
+
+
+def test_paged_engine_token_identical_across_policies(stack):
+    """The paged KV cache is a pure layout change: the 5-policy mixed
+    engine with ``cache_backend="paged"`` — page allocation at admission,
+    CoW prefix sharing, release on harvest, all interleaved mid-flight —
+    produces exactly the tokens of the dense single-policy reference runs
+    for every request."""
+    cfg, params, dec, bundles = stack
+    decp = dec.replace(cache_backend="paged", page_size=8)
+    ecfg = EngineConfig(num_slots=len(MIX), max_prompt_len=6, max_new_cap=12)
+    eng = ContinuousBatchingEngine(params, cfg, decp, ecfg, bundles=bundles,
+                                   policies={p: 1 for p in MIX})
+    sched = Scheduler(eng)
+    reqs = _workload(cfg, ecfg)
+    for r in reqs:
+        sched.submit(r)
+    finished = sched.run()
+    _check_all(stack, ecfg, finished, reqs)
+    assert all(v == 1 for v in eng.compile_counts().values()), \
+        eng.compile_counts()
+    # after the drain every group's pool is fully released and consistent
+    for g in eng.groups:
+        assert g.pages is not None, g.name
+        g.pages.check_invariants()
+        assert g.pages.live_pages() == 0, g.name
+        assert g.pages.available_pages() == g.pages.num_pages - 1, g.name
+
+
+def test_paged_engine_shares_identical_prefixes(stack):
+    """Two requests with the same prompt map the prompt-covering page once
+    (CoW) and still decode exactly like the dense reference."""
+    cfg, params, dec, bundles = stack
+    decp = dec.replace(cache_backend="paged", page_size=8)
+    # prompt spans exactly one page: max_prompt_len == page_size
+    ecfg = EngineConfig(num_slots=2, max_prompt_len=8, max_new_cap=12)
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    reqs = [Request(rid=i, prompt=prompt.copy(), max_new=6 + 3 * i)
+            for i in range(2)]
+    eng = ContinuousBatchingEngine(params, cfg, decp, ecfg, bundles=bundles)
+    for r in reqs:
+        eng.admit(r)
+    alloc = eng.groups[0].pages
+    pages = {s: list(p) for s, p in alloc.slot_pages.items()}
+    assert pages[0][0] == pages[1][0], "prefix page not shared"
+    assert alloc.refcount[pages[0][0]] == 2
+    done = []
+    while eng.has_active():
+        done += eng.step()
+    _check_all(stack, ecfg, done, reqs)
+    alloc.check_invariants()
+    # the shared prefix stays cached for future hits after release
+    assert len(alloc.prefix_map) >= 1 and alloc.live_pages() == 0
+
+
+# ---------------------------------------------------------------------------
 # Sharded variant (CI `sharded` job; skips on 1-device hosts)
 # ---------------------------------------------------------------------------
 
@@ -288,6 +347,36 @@ def test_mixed_policy_engine_sharded_token_identical(stack, mesh):
         axes = {a for e in k.sharding.spec if e
                 for a in (e if isinstance(e, tuple) else (e,))}
         assert {"data", "model"} <= axes, (g.name, k.sharding)
+
+
+@pytest.mark.sharded
+def test_paged_engine_sharded_token_identical(stack, mesh):
+    """Paged backend on the 2×2 ("data", "model") mesh: the page pool is
+    replicated over data (shared across rows) with kv heads over the model
+    axis, block tables shard with the slots — and every request still
+    matches its dense single-device single-policy reference."""
+    cfg, params, dec, bundles = stack
+    decp = dec.replace(cache_backend="paged", page_size=8)
+    ecfg = EngineConfig(num_slots=4, max_prompt_len=6, max_new_cap=12)
+    eng = ContinuousBatchingEngine(
+        params, cfg, decp, ecfg, mesh=mesh, bundles=bundles,
+        policies={"exact": 2, "topk_tree": 2})
+    rng = np.random.default_rng(29)
+    reqs = [Request(rid=i, policy=pol,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(3, 7))),
+                    max_new=int(rng.integers(4, 13)))
+            for i, pol in enumerate(["exact", "topk_tree"] * 3)]
+    sched = Scheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    finished = sched.run()
+    _check_all(stack, ecfg, finished, reqs)
+    for g in eng.groups:
+        tbl = g.state.caches[0]["attn"]["tbl"]
+        assert any(e for e in tbl.sharding.spec), (g.name, tbl.sharding)
+        g.pages.check_invariants()
+        assert g.pages.live_pages() == 0, g.name
 
 
 @pytest.mark.sharded

@@ -1,13 +1,26 @@
 """Unit tests for the verification criteria (paper §3, §5.1–§5.3),
 including hypothesis property tests over all three acceptors (skipped on
-minimal installs via the tests/_hyp.py shim)."""
+minimal installs via the tests/_hyp.py shim).
+
+Exercises the blessed DecodePolicy path (config.get_policy -> acceptor /
+schedule objects); the deprecated criterion-string shims in
+repro.core.verify keep one pinned test asserting they still delegate and
+warn."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from _hyp import given, settings, st
-from repro.config import DecodeConfig
-from repro.core.verify import accepted_block_size, position_accepts
+from repro.config import DecodeConfig, get_policy
+
+
+def position_accepts(proposals, p1_logits, dec):
+    return get_policy(dec).acceptor.accepts(proposals, p1_logits)
+
+
+def accepted_block_size(accepts, dec, remaining):
+    khat, _ = get_policy(dec).schedule.block_size(accepts, remaining, ())
+    return khat
 
 
 def _logits_for(greedy_rows, vocab=11, second=None):
@@ -180,3 +193,26 @@ def test_khat_monotone_under_tightened_distance(seed, e1, e2):
     khat_lo = np.asarray(accepted_block_size(acc_lo, d_lo, rem))
     khat_hi = np.asarray(accepted_block_size(acc_hi, d_hi, rem))
     assert np.all(khat_lo <= khat_hi)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated criterion-string shims (repro.core.verify)
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_verify_shims_delegate_and_warn():
+    """The criterion-string entry points still match the policy objects
+    bit-for-bit but emit DeprecationWarning (migration pin)."""
+    from repro.core import verify as legacy
+
+    props = jnp.asarray([[7, 4, 5, 6]])
+    logits = _logits_for([[4, 5, 9, 0]])
+    dec = DecodeConfig(criterion="exact")
+    with pytest.warns(DeprecationWarning, match="position_accepts"):
+        acc = legacy.position_accepts(props, logits, dec)
+    np.testing.assert_array_equal(np.asarray(acc),
+                                  np.asarray(position_accepts(props, logits,
+                                                              dec)))
+    with pytest.warns(DeprecationWarning, match="accepted_block_size"):
+        khat = legacy.accepted_block_size(acc, dec, jnp.asarray([100]))
+    assert int(khat[0]) == 3
