@@ -196,6 +196,13 @@ def run(*, k: int = 8, seed: int = 0, pretrain_steps: int = 900,
             "iters_per_token": sum(iters) / max(sum(gen), 1),
             "accuracy": float((toks == src).mean()),
         }
+        if name == "draft_model":
+            # suffix carry-over: sequential draft-model forwards per BPD
+            # iteration (k-1 with carry-over vs the k-step legacy loop);
+            # CI gates that the saving stays engaged
+            steps = sess.policy.drafter.draft_steps_per_iter(k)
+            results[name]["draft_steps_per_iter"] = float(steps)
+            results[name]["draft_steps_saved"] = float(k - steps)
         # lossless policies (exact acceptance) must agree token-for-token
         if name == "exact":
             ref_tokens = toks

@@ -22,6 +22,33 @@ HBM_BW = 819e9
 ICI_BW = 50e9
 
 
+def fused_verify_estimate(b: int, k: int, vocab: int, *, top_t: int = 1,
+                          dtype_bytes: int = 4) -> dict:
+    """Analytic roofline for the one-pass accept kernel
+    (``kernels.fused_verify``): bytes / FLOP estimates and the v5e memory
+    term, for the BENCH_decode.json roofline row.
+
+    The kernel streams the (b·k, V) verification logits exactly once
+    (HBM-dominant), carrying an O(top_t) running top-T per row in VMEM;
+    the accept scan epilogue touches only (b, k) integers.  The unfused
+    path reads the same logits for argmax AND materializes/reads the
+    (b, k) comparisons separately — the win is one pass instead of two
+    plus kernel-launch fusion, so bytes here are the optimum floor.
+    """
+    logits_bytes = b * k * vocab * dtype_bytes
+    io_bytes = logits_bytes + b * k * 4 * 3 + b * 4 * 2   # props + outputs
+    # per element: compare-into-max (1) + top-T merge amortized (~top_t)
+    flops = b * k * vocab * (1 + top_t)
+    return {
+        "bytes": float(io_bytes),
+        "flops": float(flops),
+        "flops_per_byte": round(flops / io_bytes, 4),
+        "v5e_memory_us": round(io_bytes / HBM_BW * 1e6, 2),
+        "v5e_compute_us": round(flops / PEAK_FLOPS_BF16 * 1e6, 4),
+        "bottleneck": "memory_s",
+    }
+
+
 def recompute_terms(r):
     """Roofline terms from the raw per-device cost-analysis values.
 
@@ -77,6 +104,12 @@ def main():
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--csv", default="experiments/roofline.csv")
     args = ap.parse_args()
+
+    est = fused_verify_estimate(64, 8, 32768)
+    print(f"[roofline] fused-verify (b=64 k=8 V=32768): "
+          f"{est['bytes'] / 2**20:.1f} MiB, {est['flops'] / 1e6:.1f} MFLOP, "
+          f"{est['flops_per_byte']:.2f} FLOP/B -> {est['bottleneck']} "
+          f"(v5e mem {est['v5e_memory_us']:.1f} us)")
 
     recs = load_records(args.dryrun_dir)
     if not recs:

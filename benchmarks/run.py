@@ -43,12 +43,21 @@ def _bench_module(name: str):
 
 def bench_kernels(emit):
     """Microbench: kernel (interpret) vs oracle — correctness-oriented on
-    CPU; the numbers that matter for TPU live in the roofline analysis."""
+    CPU; the numbers that matter for TPU live in the roofline analysis.
+
+    Row-naming discipline: Pallas timings taken in interpret mode carry an
+    ``_interp`` suffix.  Interpret mode runs the kernel body per grid step
+    through the XLA interpreter — those numbers say nothing about compiled
+    TPU performance, so no gate may ever ratio an ``_interp`` row against
+    a ``_ref`` (or future compiled) row.
+    """
     import jax.numpy as jnp
     import numpy as np
 
     from repro.kernels import ops, ref
+    from repro.kernels.tree_mask import default_tree
 
+    suffix = "" if ops.on_tpu() else "_interp"
     rng = np.random.default_rng(0)
     b, kq, h, kv, hd, l = 1, 8, 8, 2, 64, 2048
     q = jnp.asarray(rng.standard_normal((b, kq, h, hd)), jnp.float32)
@@ -57,14 +66,50 @@ def bench_kernels(emit):
     qpos = jnp.asarray(np.arange(l - kq, l)[None], jnp.int32)
     kvpos = jnp.asarray(np.arange(l)[None], jnp.int32)
 
-    for name, fn in (("verify_attention_ref",
-                      lambda: ref.verify_attention(q, k, v, qpos, kvpos)),
-                     ("verify_attention_pallas_interp",
-                      lambda: ops.verify_attention(q, k, v, qpos, kvpos))):
+    # tree-verification variant: same cache, last kq slots hold the tree
+    topo = default_tree(kq, 4)
+    depths = jnp.asarray(topo.depths)
+    tstart = l - kq
+    t_qpos = tstart + depths[None, :]
+    slot = jnp.arange(l)[None, :]
+    node = slot - tstart
+    is_tree = node >= 0
+    t_kvnode = jnp.where(is_tree, node, -1).astype(jnp.int32)
+    t_kvpos = jnp.where(is_tree, tstart + depths[jnp.clip(node, 0, kq - 1)],
+                        slot).astype(jnp.int32)
+    anc = jnp.broadcast_to(jnp.asarray(topo.anc_bits)[None, :], (b, kq))
+
+    # fused one-pass accept: serving-scale rows, real vocab
+    fb, fk, fv = 64, 8, 32768
+    logits = jnp.asarray(rng.standard_normal((fb, fk, fv)), jnp.float32)
+    props = jnp.asarray(rng.integers(0, fv, (fb, fk)), jnp.int32)
+
+    for name, fn in (
+            ("verify_attention_ref",
+             lambda: ref.verify_attention(q, k, v, qpos, kvpos)),
+            (f"verify_attention_pallas{suffix}",
+             lambda: ops.verify_attention(q, k, v, qpos, kvpos)),
+            ("tree_verify_attention_ref",
+             lambda: ref.tree_verify_attention(q, k, v, t_qpos, t_kvpos,
+                                               t_kvnode, anc)),
+            (f"tree_verify_attention_pallas{suffix}",
+             lambda: ops.tree_verify_attention(q, k, v, t_qpos, t_kvpos,
+                                               t_kvnode, anc)),
+            ("fused_verify_ref",
+             lambda: ref.fused_verify(logits, props, criterion="exact")[0]),
+            (f"fused_verify_pallas{suffix}",
+             lambda: ops.fused_verify(logits, props, criterion="exact")[0]),
+    ):
         fn()
         t0 = time.perf_counter()
         fn().block_until_ready()
         emit(name, (time.perf_counter() - t0) * 1e6, "us_per_call")
+
+    from benchmarks.roofline import fused_verify_estimate
+
+    est = fused_verify_estimate(fb, fk, fv)
+    for key, val in est.items():
+        emit(f"roofline/fused_verify/{key}", val)
 
 
 def main():
@@ -155,11 +200,11 @@ def main():
     # must fail the job while leaving the baseline artifact intact
     bench_path = os.path.join(_ROOT, "BENCH_decode.json")
     if args.smoke and "policies" in which:
-        baseline = None
+        base_rows = {}
         if os.path.exists(bench_path):
             with open(bench_path) as f:
-                baseline = json.load(f).get("rows", {}).get(
-                    "policies/exact/mean_khat")
+                base_rows = json.load(f).get("rows", {})
+        baseline = base_rows.get("policies/exact/mean_khat")
         new_exact = float(rows["policies/exact/mean_khat"])
         # NB: each passing smoke rewrites the baseline below, so the gate
         # bounds the PER-PR drop at 5% rather than enforcing an all-time
@@ -187,10 +232,32 @@ def main():
                 f"heads+exact ({new_exact:.3f}) — the speculative path "
                 f"lost its edge (distillation, student size, or the "
                 f"draft-cache sync may have regressed)")
+        # tree verification must hold the ground the fused-verify PR won:
+        # scoring the whole candidate tree in one forward pushed topk_tree
+        # past the old chain-re-rank baseline (1.9288 -> 2.22 at block_k=8)
+        tree_base = base_rows.get("policies/topk_tree/mean_khat")
+        new_tree = float(rows["policies/topk_tree/mean_khat"])
+        if tree_base is not None and new_tree < 0.95 * float(tree_base):
+            raise SystemExit(
+                f"TREE-VERIFICATION REGRESSION: topk_tree mean-k̂ "
+                f"{new_tree:.3f} fell below the committed baseline "
+                f"{float(tree_base):.3f} (tolerance 5%) — the one-forward "
+                f"tree verification lost its edge; see BENCH_decode.json")
+        # draft carry-over must keep saving sequential draft forwards
+        steps_key = "policies/draft_model/draft_steps_saved"
+        if steps_key in rows and float(rows[steps_key]) < 1.0:
+            raise SystemExit(
+                f"CARRY-OVER REGRESSION: the draft-model drafter issues "
+                f"{rows['policies/draft_model/draft_steps_per_iter']} "
+                f"sequential forwards per iteration — suffix carry-over "
+                f"(DraftModelDrafter.carry_over) stopped saving the "
+                f"catch-up step")
         # (the adaptive-cap-must-engage gate lives INSIDE sweep.run() on
         # the unrounded metrics — the rows here are rounded to 4 decimals,
         # so re-checking them would false-fire on legitimately tiny
-        # differences)
+        # differences.  NB: kernel timing rows with the `_interp` suffix
+        # are interpret-mode Pallas numbers — gates must never ratio them
+        # against `_ref` or compiled rows.)
 
     # repo-root perf-trajectory artifact (committed, so the smoke numbers
     # are diffable PR over PR; serve_throughput.py writes BENCH_serve.json).

@@ -170,6 +170,8 @@ class DecodeConfig:
     temperature: float = 0.0       # 0 = greedy (paper setting)
     cache_backend: str = "dense"   # dense | paged (models.cache.get_backend)
     page_size: int = 16            # tokens per KV page (paged backend only)
+    fused_verify: bool = False     # one-pass Pallas accept kernel (token-
+    #                                identical opt-in; kernels/fused_verify.py)
 
     def replace(self, **kw) -> "DecodeConfig":
         return dataclasses.replace(self, **kw)

@@ -60,9 +60,13 @@ def get_policy(dec, policy=None):
     Set ``DecodeConfig.policy`` to a registered name (``list_policies()``)
     and parameterize through the config fields (``top_k``, ``epsilon``,
     ``min_block`` …); pass a hand-built ``DecodePolicy`` object only for
-    combinations the registry doesn't name.  The criterion-string shims in
+    combinations the registry doesn't name.  ``DecodeConfig.fused_verify``
+    (CLI: ``launch/serve.py --fused-verify``) swaps every builder's
+    acceptor to the one-pass Pallas accept kernel
+    (``kernels/fused_verify``) — token-identical, so policies resolve the
+    same tokens with it on or off.  The criterion-string shims in
     ``repro.core.verify`` (``position_accepts`` / ``accepted_block_size``)
-    are deprecated and warn — don't add new call sites.
+    are deprecated and warn once per process — don't add new call sites.
     """
     from repro.core.policy import resolve_policy
 

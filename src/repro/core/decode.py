@@ -48,8 +48,8 @@ class Backend(NamedTuple):
 def causal_lm_backend(cfg: ModelConfig, *, kv_chunk: int = 0) -> Backend:
     return Backend(
         embed_tokens=lambda p, t: embed_apply(p["embed"], t).astype(cfg.compute_dtype),
-        decode_block=lambda p, h, c, ln: model_lib.decode_block_step(
-            p, cfg, h, c, ln, kv_chunk=kv_chunk),
+        decode_block=lambda p, h, c, ln, tree=None: model_lib.decode_block_step(
+            p, cfg, h, c, ln, kv_chunk=kv_chunk, tree=tree),
         commit=lambda c, kh: model_lib.commit_caches(cfg, c, kh),
         head_logits=lambda p, h: model_lib.all_head_logits(p, cfg, h),
     )
@@ -58,8 +58,8 @@ def causal_lm_backend(cfg: ModelConfig, *, kv_chunk: int = 0) -> Backend:
 def seq2seq_backend(cfg: ModelConfig, enc_kvs, enc_mask=None) -> Backend:
     return Backend(
         embed_tokens=lambda p, t: embed_apply(p["embed"], t).astype(cfg.compute_dtype),
-        decode_block=lambda p, h, c, ln: seq2seq_lib.decode_block_step(
-            p, cfg, h, c, ln, enc_kvs, enc_mask),
+        decode_block=lambda p, h, c, ln, tree=None: seq2seq_lib.decode_block_step(
+            p, cfg, h, c, ln, enc_kvs, enc_mask, tree=tree),
         commit=lambda c, kh: model_lib.commit_caches(cfg, c, kh),
         head_logits=lambda p, h: seq2seq_lib.all_head_logits(p, cfg, h),
     )
@@ -115,16 +115,55 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
     block_k = dec.block_k or cfg.bpd_k
     b = state.proposals.shape[0]
     pos_len = state.text_len + prefix_offset
+    topo = pol.drafter.tree_topology(block_k)
+    if topo is not None and getattr(pol.schedule, "min_block", 1) > 1:
+        raise NotImplementedError(
+            "tree verification with min_block > 1 would commit tokens "
+            "beyond the accepted root-to-leaf path")
 
     # ---- parallel scoring of the k proposals (verify ∧ next-predict) ------
     h = backend.embed_tokens(params, state.proposals)
-    hidden, staged = backend.decode_block(params, h, state.caches, pos_len)
+    if topo is None:
+        hidden, staged = backend.decode_block(params, h, state.caches,
+                                              pos_len)
+    else:
+        hidden, staged = backend.decode_block(params, h, state.caches,
+                                              pos_len, tree=topo)
     logits = backend.head_logits(params, hidden)            # (B, k, K, V)
     logits = logits[:, :, :block_k, :]
     p1_logits = logits[:, :, 0, :]
 
     # ---- verify ------------------------------------------------------------
-    accepts = pol.acceptor.accepts(state.proposals, p1_logits)
+    if topo is None:
+        accepts = pol.acceptor.accepts(state.proposals, p1_logits)
+        commit_tokens = state.proposals
+        path_nodes = None
+    else:
+        # Tree verify: node n is checked by p_1 at its PARENT node (each
+        # node's logits are ancestor-chain-conditioned thanks to the tree
+        # mask).  Permuting the logits by parent turns the tree accept into
+        # the ordinary chain accept — including the fused-kernel path; the
+        # trailing permutation slot only feeds the always-true column 0.
+        perm = tuple(topo.parents[1:]) + (0,)
+        acc_nodes = pol.acceptor.accepts(state.proposals,
+                                         p1_logits[:, perm, :])   # (B, N)
+        reach = [acc_nodes[:, 0]]                  # root: always accepted
+        for n in range(1, block_k):
+            reach.append(acc_nodes[:, n] & reach[topo.parents[n]])
+        reach = jnp.stack(reach, axis=1)                          # (B, N)
+        depth = jnp.asarray(topo.depths)
+        path_len = jnp.max(jnp.where(reach, depth[None, :] + 1, 0), axis=1)
+        # deepest reached node; argmax tie-break = lowest node id
+        chosen = jnp.argmax(jnp.where(reach, depth[None, :], -1), axis=1)
+        path_nodes = jnp.asarray(topo.path_matrix)[chosen]        # (B, D+1)
+        if path_nodes.shape[1] < block_k:
+            path_nodes = jnp.pad(
+                path_nodes, ((0, 0), (0, block_k - path_nodes.shape[1])),
+                constant_values=-1)
+        commit_tokens = jnp.take_along_axis(
+            state.proposals, jnp.clip(path_nodes, 0, block_k - 1), axis=1)
+        accepts = (jnp.arange(block_k, dtype=jnp.int32)[None, :]
+                   < path_len[:, None])            # chain-shaped for schedule
     remaining = jnp.maximum(max_new - state.generated, 1)
     khat, sched_state = pol.schedule.block_size(
         accepts, remaining, state.policy_state.schedule)    # (B,) in [1, k]
@@ -134,7 +173,7 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
     # ---- EOS handling -------------------------------------------------------
     if dec.eos_id >= 0:
         pos_in_block = jnp.arange(block_k, dtype=jnp.int32)[None, :]
-        iseos = (state.proposals == dec.eos_id) & (pos_in_block < khat[:, None])
+        iseos = (commit_tokens == dec.eos_id) & (pos_in_block < khat[:, None])
         has_eos = jnp.any(iseos, axis=1)
         first_eos = jnp.argmax(iseos, axis=1)
         khat = jnp.where(has_eos, first_eos + 1, khat)
@@ -149,8 +188,13 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
         old = buf[idx]
         return buf.at[idx].set(jnp.where(m, vals, old))
 
-    tokens = jax.vmap(row_write)(state.tokens, widx, state.proposals, wmask)
+    tokens = jax.vmap(row_write)(state.tokens, widx, commit_tokens, wmask)
     caches = backend.commit(staged, khat)
+    if topo is not None:
+        # move the accepted path's KV into chain slots so later iterations
+        # see an ordinary committed chain
+        caches = model_lib.commit_tree_path(cfg, caches, path_nodes, khat,
+                                            pos_len, block_k)
     generated = state.generated + khat
     finished = state.finished | has_eos | (generated >= max_new)
 
@@ -158,10 +202,17 @@ def bpd_iteration(params, cfg: ModelConfig, dec: DecodeConfig,
     # the committed token at the new text_len - 1 (the last accepted slot;
     # model-backed drafters re-feed it to keep their own cache in sync)
     prev_token = jnp.take_along_axis(
-        state.proposals, jnp.maximum(khat - 1, 0)[:, None], axis=1)[:, 0]
+        commit_tokens, jnp.maximum(khat - 1, 0)[:, None], axis=1)[:, 0]
+    if topo is None:
+        slot = jnp.maximum(khat - 1, 0)
+    else:
+        # the accepted slot is the path's node at depth k̂-1 (root for k̂=0)
+        slot = jnp.take_along_axis(
+            path_nodes, jnp.maximum(khat - 1, 0)[:, None], axis=1)[:, 0]
+        slot = jnp.maximum(slot, 0)
     draft_in = DraftInputs(
-        logits=logits, khat=khat, slot=jnp.maximum(khat - 1, 0),
-        text_len=state.text_len + khat, old_proposals=state.proposals,
+        logits=logits, khat=khat, slot=slot,
+        text_len=state.text_len + khat, old_proposals=commit_tokens,
         prev_token=prev_token, aux=aux_params or {})
     proposals, draft_state = pol.drafter.draft(
         draft_in, state.policy_state.drafter)

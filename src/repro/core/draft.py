@@ -59,6 +59,12 @@ class DraftModelDrafter(policy_lib.Drafter):
     kv_chunk: int = 0
     backend_factory: Optional[Callable] = None
     bundle: str = DRAFT_BUNDLE
+    # Suffix carry-over: fold the catch-up token into the first extension
+    # as one width-2 draft forward, cutting the sequential draft-model
+    # calls per iteration from block_k to block_k - 1 (token-identical —
+    # the position text_len-1 rewrite is value-identical and absolute-
+    # position masking hides the stale text_len entry from it).
+    carry_over: bool = True
 
     # -- binding --------------------------------------------------------------
 
@@ -163,24 +169,48 @@ class DraftModelDrafter(policy_lib.Drafter):
             logits = be.head_logits(params, hidden)    # (B, 1, K', V)
             return jnp.argmax(logits[:, 0, 0, :], axis=-1).astype(I32), caches
 
-        # catch-up: re-feed the committed token at text_len - 1 so the
-        # cache covers the full verified stream (see module docstring);
-        # its prediction is discarded — slot 0 is the verifier's token
-        pos0 = jnp.maximum(inputs.text_len - 1, 0)
-        _, caches = step(jnp.asarray(inputs.prev_token, I32), caches, pos0)
-
         head_argmax = jnp.argmax(inputs.logits, axis=-1)        # (B, k, K)
         verified = policy_lib._gather_slot(head_argmax, inputs.slot)[:, 0]
         verified = verified.astype(I32)
+        prev = jnp.asarray(inputs.prev_token, I32)
+        pos0 = jnp.maximum(inputs.text_len - 1, 0)
 
         props = [verified]
-        tok = verified
-        for i in range(1, k):
+        if self.carry_over and k > 1:
+            # carry-over: the catch-up token (committed at text_len - 1)
+            # and the verified slot-0 token ride one width-2 forward at
+            # positions [text_len-1, text_len] — the rewrite at text_len-1
+            # is value-identical, and the query there cannot see the stale
+            # speculative entry at text_len (absolute-position masking),
+            # while the verified-token query reads the fresh write.  One
+            # sequential draft call replaces two.
+            h = be.embed_tokens(params, jnp.stack([prev, verified], axis=1))
+            hidden, staged = be.decode_block(params, h, caches, pos0)
+            caches = be.commit(staged, ones)
+            logits = be.head_logits(params, hidden)    # (B, 2, K', V)
+            tok = jnp.argmax(logits[:, 1, 0, :], axis=-1).astype(I32)
+            props.append(tok)
+            start = 2
+        else:
+            # catch-up: re-feed the committed token at text_len - 1 so the
+            # cache covers the full verified stream (see module docstring);
+            # its prediction is discarded — slot 0 is the verifier's token
+            _, caches = step(prev, caches, pos0)
+            tok = verified
+            start = 1
+        for i in range(start, k):
             tok, caches = step(tok, caches, inputs.text_len - 1 + i)
             props.append(tok)
         return jnp.stack(props, axis=1), {"caches": caches}
 
+    def draft_steps_per_iter(self, block_k: int) -> int:
+        """Sequential draft-model forwards issued per BPD iteration."""
+        if self.carry_over and block_k > 1:
+            return block_k - 1
+        return block_k
+
 
 policy_lib.register_policy("draft_model", lambda dec: policy_lib.DecodePolicy(
-    DraftModelDrafter(), policy_lib.ExactAcceptor(),
+    DraftModelDrafter(),
+    policy_lib._maybe_fused(policy_lib.ExactAcceptor(), dec),
     policy_lib._schedule_for(dec), name="draft_model"))

@@ -108,16 +108,39 @@ def _gather_slot(x: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
 @dataclasses.dataclass(frozen=True)
 class Acceptor:
     """Per-position acceptance rule.  Subclasses implement ``position_ok``
-    on the (B, k-1) candidate slice; slot 0 is always accepted (k̂ ≥ 1)."""
+    on the (B, k-1) candidate slice; slot 0 is always accepted (k̂ ≥ 1).
+
+    ``fused=True`` routes ``accepts`` through the one-pass Pallas kernel
+    (``kernels.fused_verify``): the vocab-dimension argmax/top-k, the
+    criterion compare, and the prefix-accept scan run as a single op that
+    streams the (B, k, V) logits once instead of four separate XLA ops.
+    Token-identical to the jnp path (same ``jnp.argmax`` tie-breaking);
+    opt-in via ``DecodeConfig.fused_verify``.  Subclasses advertise their
+    compile-time kernel variant through ``fused_spec``; ``None`` means no
+    fused form exists and the jnp path is always used.
+    """
+
+    fused: bool = False
 
     def accepts(self, proposals: jnp.ndarray,
                 p1_logits: jnp.ndarray) -> jnp.ndarray:
         """proposals (B, k) int32, p1_logits (B, k, V) -> (B, k) bool."""
         b, k = proposals.shape
+        spec = self.fused_spec() if self.fused else None
+        if spec is not None:
+            from repro.kernels import ops
+
+            acc, _, _, _ = ops.fused_verify(p1_logits[:, :k, :], proposals,
+                                            **spec)
+            return acc
         ver_logits = p1_logits[:, : k - 1, :]      # slot i-1 verifies slot i
         cand = proposals[:, 1:]
         ok = self.position_ok(cand, ver_logits)
         return jnp.concatenate([jnp.ones((b, 1), bool), ok], axis=1)
+
+    def fused_spec(self) -> Optional[Dict]:
+        """kwargs for ``kernels.ops.fused_verify`` (None: no fused form)."""
+        return None
 
     def position_ok(self, cand: jnp.ndarray,
                     ver_logits: jnp.ndarray) -> jnp.ndarray:
@@ -132,6 +155,9 @@ class ExactAcceptor(Acceptor):
     def position_ok(self, cand, ver_logits):
         return cand == jnp.argmax(ver_logits, axis=-1)
 
+    def fused_spec(self):
+        return {"criterion": "exact"}
+
 
 @dataclasses.dataclass(frozen=True)
 class TopKAcceptor(Acceptor):
@@ -143,6 +169,9 @@ class TopKAcceptor(Acceptor):
         _, top_ids = jax.lax.top_k(ver_logits, self.top_k)
         return jnp.any(top_ids == cand[..., None], axis=-1)
 
+    def fused_spec(self):
+        return {"criterion": "topk", "top_k": self.top_k}
+
 
 @dataclasses.dataclass(frozen=True)
 class DistanceAcceptor(Acceptor):
@@ -153,6 +182,9 @@ class DistanceAcceptor(Acceptor):
 
     def position_ok(self, cand, ver_logits):
         return jnp.abs(cand - jnp.argmax(ver_logits, axis=-1)) <= self.epsilon
+
+    def fused_spec(self):
+        return {"criterion": "distance", "epsilon": self.epsilon}
 
 
 # ---------------------------------------------------------------------------
@@ -263,8 +295,18 @@ class Drafter:
         config (for cross-model compatibility checks)."""
         return self
 
+    def tree_topology(self, block_k: int):
+        """The static ``kernels.tree_mask.TreeTopology`` this drafter's
+        proposals form, or None for chain drafts.  Non-None switches
+        ``bpd_iteration`` to tree verification: proposals are node tokens,
+        the forward runs under a tree-attention mask, and acceptance picks
+        the longest accepted root-to-leaf path."""
+        return None
+
     def draft(self, inputs: DraftInputs, state: Any):
-        """-> (proposals (B, k) int32 with slot 0 = verified token, state)."""
+        """-> (proposals (B, k) int32 with slot 0 = verified token, state).
+        For tree drafters (``tree_topology`` non-None) slot n is the token
+        of tree node n instead of chain slot n."""
         raise NotImplementedError
 
 
@@ -320,44 +362,39 @@ class InputCopyDrafter(Drafter):
 
 @dataclasses.dataclass(frozen=True)
 class TopKTreeDrafter(Drafter):
-    """Drafts ``fanout`` candidates per slot from each head and keeps the
-    chain the strongest head also likes (cf. arXiv:2404.09221's draft
-    re-ranking: the later heads are the weakest predictors, while p_1's
-    logits at the later block slots — conditioned on the previous draft
-    chain — are free to read off the same verify forward).
+    """Drafts a candidate *tree* the verifier scores in one forward (cf.
+    arXiv:2404.09221's tree verification): node n at depth d with sibling
+    rank r carries head p_{d+1}'s r-th top token at the accepted slot, and
+    ``bpd_iteration`` runs the block under a tree-attention mask so p_1's
+    logits at every node are conditioned on that node's own ancestor
+    chain.  Acceptance then keeps the longest accepted root-to-leaf path —
+    with ``block_k`` nodes the forward costs the same as a chain, but the
+    verifier gets ``fanout`` shots at the first speculative position
+    instead of one.
 
-    Per block slot i ≥ 1 the candidates are head p_{i+1}'s top-``fanout``
-    tokens at the accepted slot; each is scored by its head log-prob plus
-    p_1's log-prob at chain slot ``k̂-1+i`` (where the positions align —
-    beyond the block the chain term is dropped).  Stateless and lossless:
-    slot 0 is still the verified greedy token.
+    The topology is ``kernels.tree_mask.default_tree``: the root (the
+    verified greedy token — tree slot 0, k̂ ≥ 1) with ``fanout`` children,
+    then a top-1 chain below the rank-0 child, so the classic heads chain
+    is always a subtree.  Stateless and lossless under exact acceptance.
     """
 
     fanout: int = 4
 
+    def tree_topology(self, block_k: int):
+        from repro.kernels.tree_mask import default_tree
+
+        return default_tree(block_k, self.fanout)
+
     def draft(self, inputs: DraftInputs, state):
-        logits = inputs.logits                                   # (B,k,K,V)
-        b, k_slots, k_heads, _ = logits.shape
-        head_logits = _gather_slot(logits, inputs.slot)          # (B,K,V)
-        head_logp = jax.nn.log_softmax(head_logits, axis=-1)
-        cand_logp, cand_ids = jax.lax.top_k(head_logp, self.fanout)
-
-        # p_1 at chain slot k̂-1+i predicts the same absolute position as
-        # next-block slot i (context: the draft chain just verified)
-        p1_logp = jax.nn.log_softmax(logits[:, :, 0, :], axis=-1)  # (B,k,V)
-        chain_slot = inputs.slot[:, None] + jnp.arange(k_heads,
-                                                       dtype=I32)[None, :]
-        valid = chain_slot <= k_slots - 1                        # (B,K)
-        idx = jnp.clip(chain_slot, 0, k_slots - 1)
-        chain_logp = jax.vmap(lambda p, i: p[i])(p1_logp, idx)   # (B,K,V)
-        chain_cand = jnp.take_along_axis(chain_logp, cand_ids, axis=-1)
-        score = cand_logp + jnp.where(valid[..., None], chain_cand, 0.0)
-
-        best = jnp.argmax(score, axis=-1)                        # (B,K)
-        proposals = jnp.take_along_axis(cand_ids, best[..., None],
-                                        axis=-1)[..., 0].astype(I32)
-        verified = jnp.argmax(head_logits[:, 0, :], axis=-1).astype(I32)
-        return proposals.at[:, 0].set(verified), state
+        b, k = inputs.old_proposals.shape
+        topo = self.tree_topology(k)
+        head_logits = _gather_slot(inputs.logits, inputs.slot)   # (B,K,V)
+        need = int(topo.ranks.max()) + 1
+        _, ids = jax.lax.top_k(head_logits, need)                # (B,K,need)
+        d = jnp.asarray(topo.depths)                             # head index
+        r = jnp.asarray(topo.ranks)                              # rank index
+        # node 0 is (depth 0, rank 0) = head p_1's argmax = the verified token
+        return ids[:, d, r].astype(I32), state
 
 
 # ---------------------------------------------------------------------------
@@ -461,23 +498,31 @@ def _schedule_for(dec: DecodeConfig) -> BlockSchedule:
     return StaticSchedule(min_block=dec.min_block)
 
 
+def _maybe_fused(acceptor: Acceptor, dec: DecodeConfig) -> Acceptor:
+    """Honor ``DecodeConfig.fused_verify`` in the built-in builders."""
+    if getattr(dec, "fused_verify", False):
+        return dataclasses.replace(acceptor, fused=True)
+    return acceptor
+
+
 register_policy("exact", lambda dec: DecodePolicy(
-    HeadsDrafter(), ExactAcceptor(), _schedule_for(dec), name="exact"))
+    HeadsDrafter(), _maybe_fused(ExactAcceptor(), dec), _schedule_for(dec),
+    name="exact"))
 register_policy("topk", lambda dec: DecodePolicy(
-    HeadsDrafter(), TopKAcceptor(top_k=dec.top_k), _schedule_for(dec),
-    name="topk"))
+    HeadsDrafter(), _maybe_fused(TopKAcceptor(top_k=dec.top_k), dec),
+    _schedule_for(dec), name="topk"))
 register_policy("distance", lambda dec: DecodePolicy(
-    HeadsDrafter(), DistanceAcceptor(epsilon=dec.epsilon), _schedule_for(dec),
-    name="distance"))
+    HeadsDrafter(), _maybe_fused(DistanceAcceptor(epsilon=dec.epsilon), dec),
+    _schedule_for(dec), name="distance"))
 register_policy("adaptive", lambda dec: DecodePolicy(
-    HeadsDrafter(), ExactAcceptor(),
+    HeadsDrafter(), _maybe_fused(ExactAcceptor(), dec),
     AdaptiveSchedule(min_block=dec.min_block), name="adaptive"))
 register_policy("input_copy", lambda dec: DecodePolicy(
-    InputCopyDrafter(), ExactAcceptor(), _schedule_for(dec),
+    InputCopyDrafter(), _maybe_fused(ExactAcceptor(), dec), _schedule_for(dec),
     name="input_copy"))
 register_policy("topk_tree", lambda dec: DecodePolicy(
-    TopKTreeDrafter(fanout=max(dec.top_k, 2)), ExactAcceptor(),
-    _schedule_for(dec), name="topk_tree"))
+    TopKTreeDrafter(fanout=max(dec.top_k, 2)),
+    _maybe_fused(ExactAcceptor(), dec), _schedule_for(dec), name="topk_tree"))
 
 # the model-backed speculative drafter lives in core.draft (it pulls in the
 # model stack); importing it here registers the "draft_model" policy so the

@@ -28,6 +28,17 @@ import jax.numpy as jnp
 from repro.config import DecodeConfig
 from repro.core.policy import StaticSchedule, resolve_policy
 
+# Each shim warns once per process: decode loops call these per iteration,
+# and a warning per call drowns the signal that should prompt migration.
+_WARNED: set = set()
+
+
+def _warn_once(name: str, message: str) -> None:
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
 
 def position_accepts(proposals: jnp.ndarray, p1_logits: jnp.ndarray,
                      dec: DecodeConfig) -> jnp.ndarray:
@@ -40,11 +51,11 @@ def position_accepts(proposals: jnp.ndarray, p1_logits: jnp.ndarray,
     p1_logits : (B, k, V) — p_1 logits at block slots 0..k-1
     returns   : (B, k) bool; column 0 is always True.
     """
-    warnings.warn(
+    _warn_once(
+        "position_accepts",
         "repro.core.verify.position_accepts is deprecated; resolve a "
         "DecodePolicy (repro.config.get_policy) and call "
-        "policy.acceptor.accepts(proposals, p1_logits)",
-        DeprecationWarning, stacklevel=2)
+        "policy.acceptor.accepts(proposals, p1_logits)")
     return resolve_policy(dec).acceptor.accepts(proposals, p1_logits)
 
 
@@ -58,11 +69,11 @@ def accepted_block_size(accepts: jnp.ndarray, dec: DecodeConfig,
 
     accepts: (B, k) bool -> (B,) int32 in [1, k] (before remaining clamp).
     """
-    warnings.warn(
+    _warn_once(
+        "accepted_block_size",
         "repro.core.verify.accepted_block_size is deprecated; resolve a "
         "DecodePolicy (repro.config.get_policy) and call "
-        "policy.schedule.block_size(accepts, remaining, state)",
-        DeprecationWarning, stacklevel=2)
+        "policy.schedule.block_size(accepts, remaining, state)")
     khat, _ = StaticSchedule(min_block=dec.min_block).block_size(
         accepts, remaining, ())
     return khat

@@ -1,0 +1,166 @@
+"""Pallas TPU kernel: fused one-pass block verification (paper §3, §5.1–5.2).
+
+The BPD accept step is a chain of vocab-dimension ops on the verify
+forward's p_1 logits — argmax / top-k per block slot, a compare against the
+drafted tokens, and the longest-accepted-prefix scan.  Run separately,
+each op round-trips the (B, k, V) logit tensor through HBM (V reaches 256k
+padded for the assigned archs).  This kernel streams the logits once in
+``block_v`` vocab tiles, keeps a running top-T (values, ids) carry per
+(row, slot) in VMEM — the ``fused_heads.py`` merge idiom — and on the last
+tile performs the criterion compare plus the prefix-accept scan in
+registers, emitting per row:
+
+    accepts (B, k) — per-slot acceptance (column 0 always True, k̂ ≥ 1)
+    k̂      (B,)   — longest accepted prefix (before schedule clamping)
+    tokens  (B, k) — the accepted prefix of the draft, zero beyond k̂
+    next    (B,)   — the verifier's greedy token at slot k̂-1 (the one
+                     guaranteed-correct token every iteration commits)
+
+Criterion variants are compile-time (``functools.partial``): ``exact``
+(§3 greedy match), ``topk`` (§5.1, T = top_k carry), ``distance`` (§5.2
+ordinal tolerance).  Tie-breaking matches ``jnp.argmax`` exactly:
+``lax.top_k`` is stable (lowest index wins) and the carry∪tile merge
+concatenates the carry — earlier vocab tiles — first, so equal logits
+resolve to the lowest token id in both the fused and unfused paths.
+
+Grid: (num_row_tiles, num_vocab_tiles); vocab axis sequential, carry in
+VMEM.  Row tiles hold whole batch rows (rn = rb·k, a multiple of 8) so the
+cross-slot prefix scan never spans tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+CRITERIA = ("exact", "topk", "distance")
+
+
+def _accept_scan(ids, props, *, criterion: str, k: int, epsilon: float):
+    """Shared final-tile epilogue: criterion compare + prefix scan.
+
+    ids: (rb, k, T) top-T token ids per slot; props: (rb, k) draft tokens.
+    Returns (accepts bool, k̂ (rb,1), accepted tokens, next greedy (rb,1)).
+    """
+    rb = props.shape[0]
+    greedy = ids[..., 0]                                   # (rb, k)
+    cand = props[:, 1:]                                    # slot i-1 checks i
+    if criterion == "exact":
+        ok = cand == greedy[:, :k - 1]
+    elif criterion == "topk":
+        ok = jnp.any(ids[:, :k - 1, :] == cand[..., None], axis=-1)
+    elif criterion == "distance":
+        ok = jnp.abs(cand - greedy[:, :k - 1]).astype(jnp.float32) <= epsilon
+    else:  # pragma: no cover - guarded by the wrapper
+        raise ValueError(f"unknown criterion {criterion!r}")
+    acc = jnp.concatenate([jnp.ones((rb, 1), jnp.bool_), ok], axis=1)
+    rej = jnp.logical_not(acc)
+    first = jnp.argmax(rej.astype(jnp.int32), axis=1, keepdims=True)
+    any_rej = jnp.any(rej, axis=1, keepdims=True)
+    khat = jnp.where(any_rej, first, k).astype(jnp.int32)  # (rb, 1)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (rb, k), 1)
+    toks = jnp.where(slot < khat, props, 0)
+    nxt = jnp.sum(jnp.where(slot == khat - 1, greedy, 0), axis=1,
+                  keepdims=True)
+    return acc, khat, toks, nxt
+
+
+def _fused_verify_kernel(logits_ref, prop_ref,             # inputs
+                         acc_ref, khat_ref, tok_ref, nxt_ref,   # outputs
+                         bval_ref, bidx_ref,               # scratch
+                         *, criterion: str, k: int, top_t: int,
+                         block_v: int, vocab: int, epsilon: float):
+    vb = pl.program_id(1)
+
+    @pl.when(vb == 0)
+    def _init():
+        bval_ref[...] = jnp.full_like(bval_ref, NEG_INF)
+        bidx_ref[...] = jnp.zeros_like(bidx_ref)
+
+    logits = logits_ref[...].astype(jnp.float32)           # (rb·k, block_v)
+    base = vb * block_v
+    lane = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) + base
+    logits = jnp.where(lane < vocab, logits, NEG_INF)      # mask vocab pad
+
+    tvals, tids = jax.lax.top_k(logits, top_t)             # tile-local top-T
+    cand_v = jnp.concatenate([bval_ref[...], tvals], axis=1)
+    cand_i = jnp.concatenate([bidx_ref[...], tids + base], axis=1)
+    mvals, sel = jax.lax.top_k(cand_v, top_t)              # merge carry ∪ tile
+    bval_ref[...] = mvals
+    bidx_ref[...] = jnp.take_along_axis(cand_i, sel, axis=1)
+
+    @pl.when(vb == pl.num_programs(1) - 1)
+    def _finish():
+        rb = prop_ref.shape[0]
+        ids = bidx_ref[...].reshape(rb, k, top_t)
+        acc, khat, toks, nxt = _accept_scan(
+            ids, prop_ref[...], criterion=criterion, k=k, epsilon=epsilon)
+        acc_ref[...] = acc.astype(jnp.int32)
+        khat_ref[...] = khat
+        tok_ref[...] = toks
+        nxt_ref[...] = nxt
+
+
+def fused_verify_pallas(p1_logits, proposals, *, criterion: str,
+                        top_k: int = 1, epsilon: float = 0.0,
+                        block_rows: int = 64, block_v: int = 1024,
+                        interpret: bool = False):
+    """p1_logits: (B, k, V) verify-forward p_1 logits at block slots 0..k-1;
+    proposals: (B, k) int32 draft tokens (slot 0 = the verified token).
+
+    Returns (accepts (B, k) bool, k̂ (B,) int32, accepted_tokens (B, k)
+    int32, next_greedy (B,) int32).  Bit-identical to ``ref.fused_verify``
+    and to the unfused ``Acceptor`` path for the same criterion.
+    """
+    if criterion not in CRITERIA:
+        raise ValueError(f"unknown criterion {criterion!r}; one of {CRITERIA}")
+    b, k, v = p1_logits.shape
+    top_t = max(1, int(top_k)) if criterion == "topk" else 1
+    block_v = min(block_v, max(128, v))
+    vp = ((v + block_v - 1) // block_v) * block_v
+
+    # whole batch rows per tile, rn = rb·k aligned to the 8-sublane tile
+    rn_unit = (k * 8) // math.gcd(k, 8)
+    rb = (rn_unit // k) * max(1, block_rows // rn_unit)
+    b_pad = ((b + rb - 1) // rb) * rb
+    rn = rb * k
+
+    lg = jnp.pad(p1_logits.astype(jnp.float32),
+                 ((0, b_pad - b), (0, 0), (0, vp - v)),
+                 constant_values=NEG_INF).reshape(b_pad * k, vp)
+    props = jnp.pad(proposals.astype(jnp.int32), ((0, b_pad - b), (0, 0)))
+
+    grid = (b_pad // rb, vp // block_v)
+    acc, khat, toks, nxt = pl.pallas_call(
+        functools.partial(_fused_verify_kernel, criterion=criterion, k=k,
+                          top_t=top_t, block_v=block_v, vocab=v,
+                          epsilon=float(epsilon)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rn, block_v), lambda ri, vi: (ri, vi)),
+            pl.BlockSpec((rb, k), lambda ri, vi: (ri, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rb, k), lambda ri, vi: (ri, 0)),
+            pl.BlockSpec((rb, 1), lambda ri, vi: (ri, 0)),
+            pl.BlockSpec((rb, k), lambda ri, vi: (ri, 0)),
+            pl.BlockSpec((rb, 1), lambda ri, vi: (ri, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad, k), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rn, top_t), jnp.float32),
+            pltpu.VMEM((rn, top_t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lg, props)
+    return (acc[:b].astype(jnp.bool_), khat[:b, 0], toks[:b], nxt[:b, 0])

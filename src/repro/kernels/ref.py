@@ -36,6 +36,33 @@ def verify_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
     return ctx.reshape(b, kq, h, hd).astype(q.dtype)
 
 
+def tree_verify_attention(q, k, v, q_pos, kv_pos, kv_node, anc_bits, *,
+                          window: int = 0, num_meta: int = 0) -> jnp.ndarray:
+    """Tree-verification attention oracle (see block_attention's tree
+    variant).  kv_node: (B, L) node index for this block's tree slots, -1
+    for committed-prefix slots; anc_bits: (B, kq) packed ancestor-or-self
+    bitmask per query node.  Positions are logical (RoPE) positions."""
+    b, kq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kq, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    kn = kv_node[:, None, :]
+    mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask &= (qp - kp < window) | (kp < num_meta)
+    bit = jax.lax.shift_right_logical(
+        anc_bits.astype(jnp.int32)[:, :, None], jnp.clip(kn, 0, 31)) & 1
+    mask &= (kn < 0) | (bit != 0)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgqs,bshk->bqhgk", probs, v.astype(jnp.float32))
+    return ctx.reshape(b, kq, h, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # paged_attention oracle
 # ---------------------------------------------------------------------------
@@ -91,3 +118,39 @@ def heads_topk(o, w_vocab, *, vocab: int, top_t: int = 4):
     logits = jnp.where(lane[None, :] < vocab, logits, NEG_INF)
     vals, ids = jax.lax.top_k(logits, top_t)
     return vals, ids.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# fused_verify oracle (materialized top-T + prefix-accept scan)
+# ---------------------------------------------------------------------------
+
+
+def fused_verify(p1_logits, proposals, *, criterion: str, top_k: int = 1,
+                 epsilon: float = 0.0):
+    """p1_logits: (B, k, V); proposals: (B, k) int32 (slot 0 = verified).
+
+    Returns (accepts (B, k) bool, k̂ (B,) int32, accepted_tokens (B, k)
+    int32, next_greedy (B,) int32) — same contract and tie-breaking
+    (``lax.top_k`` is stable, lowest token id wins) as the Pallas kernel.
+    """
+    b, k, _ = p1_logits.shape
+    top_t = max(1, int(top_k)) if criterion == "topk" else 1
+    _, ids = jax.lax.top_k(p1_logits.astype(jnp.float32), top_t)
+    greedy = ids[..., 0]                                    # (B, k)
+    cand = proposals[:, 1:]
+    if criterion == "exact":
+        ok = cand == greedy[:, :k - 1]
+    elif criterion == "topk":
+        ok = jnp.any(ids[:, :k - 1, :] == cand[..., None], axis=-1)
+    elif criterion == "distance":
+        ok = jnp.abs(cand - greedy[:, :k - 1]).astype(jnp.float32) <= epsilon
+    else:
+        raise ValueError(f"unknown criterion {criterion!r}")
+    acc = jnp.concatenate([jnp.ones((b, 1), jnp.bool_), ok], axis=1)
+    rej = jnp.logical_not(acc)
+    first = jnp.argmax(rej.astype(jnp.int32), axis=1)
+    khat = jnp.where(jnp.any(rej, axis=1), first, k).astype(jnp.int32)
+    slot = jnp.arange(k)[None, :]
+    toks = jnp.where(slot < khat[:, None], proposals, 0).astype(jnp.int32)
+    nxt = jnp.take_along_axis(greedy, (khat - 1)[:, None], axis=1)[:, 0]
+    return acc, khat, toks, nxt.astype(jnp.int32)

@@ -95,6 +95,11 @@ def main():
                     help="checkpoint dir for the draft model's params "
                          "(unset: randomly initialized — lossless but "
                          "slow, demo only)")
+    ap.add_argument("--fused-verify", action="store_true",
+                    help="route block acceptance through the one-pass "
+                         "Pallas accept kernel (kernels/fused_verify; "
+                         "token-identical opt-in — interpret-mode, i.e. "
+                         "slow, off TPU)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", action="store_true",
                     help="serve through the continuous-batching engine "
@@ -129,7 +134,8 @@ def main():
                        policy=args.policy or args.criterion,
                        top_k=args.top_k, epsilon=args.epsilon,
                        cache_backend=args.cache_backend,
-                       page_size=args.page_size)
+                       page_size=args.page_size,
+                       fused_verify=args.fused_verify)
     task = MarkovLM(vocab=min(cfg.vocab_size, 256), temperature=0.2,
                     seed=args.seed)
     prompts = jnp.asarray(task.sample(np.random.default_rng(args.seed + 1),

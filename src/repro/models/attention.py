@@ -295,7 +295,8 @@ def cache_write(cache: Dict, cfg: ModelConfig, layer_idx: int, k, v, positions) 
 
 
 def attn_cached(p, cfg: ModelConfig, x_block, cache: Dict, length, *,
-                layer_idx: int = 0, kv_chunk: int = 0) -> Tuple[jnp.ndarray, Dict]:
+                layer_idx: int = 0, kv_chunk: int = 0,
+                tree=None) -> Tuple[jnp.ndarray, Dict]:
     """Verify-substep attention: ``k`` fresh tokens vs the cache and each other.
 
     x_block : (B, k, d) tokens at absolute positions length .. length+k-1
@@ -303,11 +304,35 @@ def attn_cached(p, cfg: ModelConfig, x_block, cache: Dict, length, *,
               entries with pos >= length+k are stale speculative writes from
               rows that advanced differently and are masked out; entries in
               [length, length+k) are overwritten by this call's own write.
+    tree    : optional ``kernels.tree_mask.TreeTopology`` — the block is a
+              draft *tree* of ``k`` nodes instead of a chain.  Node n still
+              writes its KV at storage position ``length + n`` (so the
+              cache layout, slot math, and rollback masking are unchanged),
+              but RoPE runs at the node's *logical* position
+              ``length + depth[n]`` and the intra-block mask columns are
+              overridden with the static ancestor matrix, so each node
+              attends exactly to its root-to-node chain plus the committed
+              cache.  After acceptance ``tree_commit_attn`` compacts the
+              chosen root-to-leaf path back into chain slots.
     """
     b, kblk, _ = x_block.shape
     length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
     positions = length[:, None] + jnp.arange(kblk, dtype=jnp.int32)[None, :]
-    q, k, v = _project_qkv(p, cfg, x_block, positions)
+    if tree is None:
+        rope_pos = positions
+    else:
+        if kv_chunk:
+            raise ValueError(
+                "tree verification is incompatible with kv_chunk (chunked "
+                "attention has no per-column mask override); use the dense "
+                "mask path for tree-drafted decode")
+        if tree.num_nodes != kblk:
+            raise ValueError(
+                f"tree topology has {tree.num_nodes} nodes but the block "
+                f"has {kblk} slots")
+        depth = jnp.asarray(tree.depths)
+        rope_pos = length[:, None] + depth[None, :]
+    q, k, v = _project_qkv(p, cfg, x_block, rope_pos)
     cache = cache_write(cache, cfg, layer_idx, k, v, positions)
     window = 0 if layer_idx in cfg.global_attn_layers else cfg.sliding_window
     kv_pos = cache["pos"]                                          # (B, L)
@@ -319,11 +344,77 @@ def attn_cached(p, cfg: ModelConfig, x_block, cache: Dict, length, *,
                               bidirectional=False,
                               head_dim=cfg.resolved_head_dim, chunk=kv_chunk)
     else:
-        mask = make_causal_mask(positions, kv_pos, window=window,
+        mask = make_causal_mask(rope_pos, kv_pos, window=window,
                                 num_meta=cfg.num_meta_tokens)       # (B, k, L)
+        if tree is not None:
+            # this block's entries sit at KV-view columns == their storage
+            # slots; override those columns with ancestor ∧ window masking
+            # computed on the nodes' logical positions
+            intra = (jnp.asarray(tree.anc_matrix)[None]
+                     & make_causal_mask(rope_pos, rope_pos, window=window,
+                                        num_meta=cfg.num_meta_tokens))
+            if "kp" in cache:
+                cols = positions           # paged view column == position
+            else:
+                buf_len = cache["k"].shape[1]
+                nres = _reserved_slots(cfg, layer_idx, buf_len)
+                cols = _slot_for(positions, buf_len, nres)
+            mask = jax.vmap(lambda m, s, iv: m.at[:, s].set(iv))(
+                mask, cols, intra)
         ctx = _gqa_attend(q, ck, cv, mask,
                           head_dim=cfg.resolved_head_dim)
     return _out_proj(p, ctx), cache
+
+
+def tree_commit_attn(cache: Dict, cfg: ModelConfig, layer_idx: int,
+                     path_nodes, khat, length, block_k: int) -> Dict:
+    """Compact an accepted root-to-leaf tree path into chain slots.
+
+    After a tree verify forward, the KV for the token committed at position
+    ``length + j`` lives at storage position ``length + path_nodes[:, j]``
+    (the path's node at depth j — its RoPE position is already correct,
+    since depth[path_nodes[:, j]] == j).  This gathers those entries and
+    rewrites the leading ``khat`` chain slots so subsequent iterations see
+    an ordinary committed chain; slots at j >= k̂ keep their speculative
+    entries, which the next block overwrites exactly like chain decode.
+
+    path_nodes : (B, k) int32 — node id at depth j (< 0 beyond the path)
+    khat       : (B,) int32 accepted tokens; 0 = frozen row (no writes)
+    length     : (B,) or () int32 pre-accept lengths (the block's base)
+    """
+    b = path_nodes.shape[0]
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    j = jnp.arange(block_k, dtype=jnp.int32)[None, :]
+    src_pos = length[:, None] + jnp.clip(path_nodes, 0, block_k - 1)
+    dst_pos = length[:, None] + j
+    keep = (j < khat[:, None]) & (jnp.clip(path_nodes, 0, block_k - 1) != j)
+    new = dict(cache)
+    if "kp" in cache:
+        kp, vp, tbl = cache["kp"], cache["vp"], cache["tbl"]
+        num_pages, ps, kvh, hd = kp.shape
+        rows = jnp.arange(b)[:, None]
+        phys_src = tbl[rows, src_pos // ps] * ps + src_pos % ps
+        phys_dst = tbl[rows, dst_pos // ps] * ps + dst_pos % ps
+        kf = kp.reshape(num_pages * ps, kvh, hd)
+        vf = vp.reshape(num_pages * ps, kvh, hd)
+        m = keep.reshape(-1)[:, None, None]
+        kvals = jnp.where(m, kf[phys_src.reshape(-1)], kf[phys_dst.reshape(-1)])
+        vvals = jnp.where(m, vf[phys_src.reshape(-1)], vf[phys_dst.reshape(-1)])
+        new["kp"] = kf.at[phys_dst.reshape(-1)].set(kvals).reshape(kp.shape)
+        new["vp"] = vf.at[phys_dst.reshape(-1)].set(vvals).reshape(vp.shape)
+        return new
+    buf_len = cache["k"].shape[1]
+    nres = _reserved_slots(cfg, layer_idx, buf_len)
+    sslot = _slot_for(src_pos, buf_len, nres)
+    dslot = _slot_for(dst_pos, buf_len, nres)
+
+    def row(buf, ss, ds, m):
+        vals = jnp.where(m[:, None, None], buf[ss], buf[ds])
+        return buf.at[ds].set(vals)
+
+    new["k"] = jax.vmap(row)(cache["k"], sslot, dslot, keep)
+    new["v"] = jax.vmap(row)(cache["v"], sslot, dslot, keep)
+    return new
 
 
 # ---------------------------------------------------------------------------

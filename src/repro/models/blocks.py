@@ -184,22 +184,33 @@ def block_full(p, cfg: ModelConfig, layer_idx: int, x, *, positions=None,
 
 
 def block_cached(p, cfg: ModelConfig, layer_idx: int, x, cache: Dict, length,
-                 *, enc_kv=None, enc_mask=None, kv_chunk: int = 0
+                 *, enc_kv=None, enc_mask=None, kv_chunk: int = 0, tree=None
                  ) -> Tuple[jnp.ndarray, Dict]:
     """x: (B, k, d) fresh tokens at positions length..length+k-1.
 
     Returns (y, new_cache).  Recurrent state entries in new_cache are stacked
     per-step (leading axis k) — ``commit_cache`` resolves them once k̂ is
     known.  Attention cache entries need no rollback (masking by position).
+
+    ``tree`` (a ``kernels.tree_mask.TreeTopology``) switches the block to
+    tree verification — attention-family layers only: recurrent states are
+    conditioned on the whole previous chain step-by-step, so a branching
+    block has no single per-step state to roll back to.
     """
     b, kblk, _ = x.shape
     new_cache = dict(cache)
+
+    if tree is not None and cfg.block_type != "attn":
+        raise NotImplementedError(
+            f"tree verification requires pure attention blocks "
+            f"(block_type='attn'); {cfg.block_type!r} carries chain-"
+            f"conditioned per-step recurrent state")
 
     h = norm_apply(p["ln1"], x, kind=cfg.norm_type)
     if cfg.block_type == "attn":
         y, new_cache["attn"] = attn_cached(p["attn"], cfg, h, cache["attn"],
                                            length, layer_idx=layer_idx,
-                                           kv_chunk=kv_chunk)
+                                           kv_chunk=kv_chunk, tree=tree)
     elif cfg.block_type == "rwkv6":
         y, aux = rwkv_tm_apply(p["tm"], cfg, h,
                                x_prev=cache["tm"]["shift_tm"],

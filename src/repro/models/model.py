@@ -143,16 +143,18 @@ def forward_hidden(params, cfg: ModelConfig, h, *, positions=None,
 
 
 def decode_block_step(params, cfg: ModelConfig, h, caches, length, *,
-                      kv_chunk: int = 0):
+                      kv_chunk: int = 0, tree=None):
     """BPD verify-substep backbone: k fresh embeddings vs the caches.
 
     Returns (hidden_block, staged_caches). staged caches carry stacked
     per-step recurrent states; call ``commit_caches`` with k̂ to resolve.
+    ``tree`` switches the block to tree verification (see
+    ``models.attention.attn_cached``).
     """
     new_caches = []
     for i, bp in enumerate(params["blocks"]):
         h, c_out = block_cached(bp, cfg, i, h, caches[i], length,
-                                kv_chunk=kv_chunk)
+                                kv_chunk=kv_chunk, tree=tree)
         new_caches.append(c_out)
     h = norm_apply(params["final_norm"], h, kind=cfg.norm_type)
     return h, tuple(new_caches)
@@ -160,6 +162,22 @@ def decode_block_step(params, cfg: ModelConfig, h, caches, length, *,
 
 def commit_caches(cfg: ModelConfig, caches, khat):
     return tuple(commit_cache(cfg, c, khat) for c in caches)
+
+
+def commit_tree_path(cfg: ModelConfig, caches, path_nodes, khat, length,
+                     block_k: int):
+    """Compact the accepted root-to-leaf path into chain slots per layer
+    after a tree verify forward (see ``attention.tree_commit_attn``)."""
+    from repro.models.attention import tree_commit_attn
+
+    out = []
+    for i, c in enumerate(caches):
+        nc = dict(c)
+        if "attn" in c:
+            nc["attn"] = tree_commit_attn(c["attn"], cfg, i, path_nodes,
+                                          khat, length, block_k)
+        out.append(nc)
+    return tuple(out)
 
 
 def init_caches(cfg: ModelConfig, batch: int, context_len: int, block_k: int,

@@ -83,11 +83,12 @@ def forward_hidden(params, cfg: ModelConfig, tgt_tokens, enc_kvs, *,
 
 
 def decode_block_step(params, cfg: ModelConfig, h, caches, length, enc_kvs,
-                      enc_mask=None):
+                      enc_mask=None, tree=None):
     new_caches = []
     for i, bp in enumerate(params["blocks"]):
         h, c_out = block_cached(bp, cfg, i, h, caches[i], length,
-                                enc_kv=enc_kvs[i], enc_mask=enc_mask)
+                                enc_kv=enc_kvs[i], enc_mask=enc_mask,
+                                tree=tree)
         new_caches.append(c_out)
     h = norm_apply(params["final_norm"], h, kind=cfg.norm_type)
     return h, tuple(new_caches)

@@ -5,7 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st
 from repro.kernels import ops, ref
+from repro.kernels.tree_mask import TreeTopology, default_tree
 
 RNG = np.random.default_rng(42)
 
@@ -213,6 +215,183 @@ def test_fused_heads_never_selects_vocab_pad():
     _, ids = ops.fused_heads_topk(o, w, vocab=300, top_t=4, block_v=128,
                                   block_rows=8)
     assert int(jnp.max(ids)) < 300
+
+
+# ---------------------------------------------------------------------------
+# fused_verify (one-pass accept)
+# ---------------------------------------------------------------------------
+
+FV_CRITERIA = ("exact", "topk", "distance")
+
+
+def _acceptor_for(crit):
+    from repro.core import policy as policy_lib
+
+    return {"exact": policy_lib.ExactAcceptor(),
+            "topk": policy_lib.TopKAcceptor(top_k=3),
+            "distance": policy_lib.DistanceAcceptor(epsilon=2.0)}[crit]
+
+
+def _check_fused_verify(seed, crit, b, k, vocab, dtype, block_rows=8,
+                        block_v=128):
+    """Kernel == jnp oracle == (unfused) Acceptor semantics, bit-for-bit
+    on the discrete outputs."""
+    rng = np.random.default_rng(seed)
+    props = jnp.asarray(rng.integers(0, vocab, (b, k)), jnp.int32)
+    logits = jnp.asarray(rng.normal(size=(b, k, vocab)).astype(np.float32),
+                         dtype)
+    kw = dict(criterion=crit, top_k=3, epsilon=2.0)
+    acc, khat, toks, nxt = ops.fused_verify(logits, props,
+                                            block_rows=block_rows,
+                                            block_v=block_v, **kw)
+    acc2, khat2, toks2, nxt2 = ref.fused_verify(logits, props, **kw)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc2))
+    np.testing.assert_array_equal(np.asarray(khat), np.asarray(khat2))
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks2))
+    np.testing.assert_array_equal(np.asarray(nxt), np.asarray(nxt2))
+    # the per-position accepts ARE the policy Acceptor's decisions
+    pol_acc = _acceptor_for(crit).accepts(props, logits)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(pol_acc))
+    # contract: slot 0 accepted, khat = longest accepted prefix, tokens
+    # zero-padded past khat, next_greedy in vocab
+    a, kh = np.asarray(acc), np.asarray(khat)
+    assert a[:, 0].all() and np.all(kh >= 1) and np.all(kh <= k)
+    for i in range(b):
+        assert a[i, :kh[i]].all()
+        if kh[i] < k:
+            assert not a[i, kh[i]]
+    t = np.asarray(toks)
+    assert np.all(t[np.arange(k)[None, :] >= kh[:, None]] == 0)
+    assert np.all((np.asarray(nxt) >= 0) & (np.asarray(nxt) < vocab))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("crit", FV_CRITERIA)
+@pytest.mark.parametrize("b,k,vocab,block_v", [
+    (3, 4, 128, 128),        # single vocab tile
+    (2, 8, 1000, 256),       # ragged vocab (pad lanes in the last tile)
+    (5, 6, 333, 128),        # b*k not a sublane multiple
+    (1, 2, 2048, 1024),
+])
+def test_fused_verify_sweep(b, k, vocab, block_v, crit, dtype):
+    _check_fused_verify(7, crit, b, k, vocab, dtype, block_v=block_v)
+
+
+@pytest.mark.parametrize("crit", FV_CRITERIA)
+def test_fused_verify_all_accept_and_all_reject(crit):
+    """Degenerate rows: a proposal chain equal to the greedy chain commits
+    the whole block; one that never matches (and is ordinally far) commits
+    exactly slot 0."""
+    b, k, vocab = 2, 5, 64
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(b, k, vocab)), jnp.float32)
+    greedy = np.asarray(jnp.argmax(logits, -1))
+    props_acc = np.zeros((b, k), np.int32)
+    props_acc[:, 1:] = greedy[:, :k - 1]                 # slot i <- greedy i-1
+    acc, khat, _, _ = ops.fused_verify(
+        logits, jnp.asarray(props_acc), criterion=crit, top_k=3,
+        epsilon=2.0, block_rows=8, block_v=64)
+    assert np.asarray(acc).all() and np.all(np.asarray(khat) == k)
+    # rejection: tokens ordinally >2.0 from greedy, outside top-3, != greedy
+    order = np.argsort(-np.asarray(logits), axis=-1)     # (b, k, vocab)
+    props_rej = np.zeros((b, k), np.int32)
+    for i in range(b):
+        for j in range(1, k):
+            cand = [t for t in order[i, j - 1, vocab // 2:]
+                    if abs(int(t) - int(greedy[i, j - 1])) > 2]
+            props_rej[i, j] = cand[0]
+    acc, khat, toks, nxt = ops.fused_verify(
+        logits, jnp.asarray(props_rej), criterion=crit, top_k=3,
+        epsilon=2.0, block_rows=8, block_v=64)
+    assert np.all(np.asarray(khat) == 1)
+    np.testing.assert_array_equal(np.asarray(acc)[:, 1:], False)
+    np.testing.assert_array_equal(np.asarray(toks)[:, 1:], 0)
+    np.testing.assert_array_equal(np.asarray(nxt), greedy[:, 0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), crit=st.sampled_from(FV_CRITERIA),
+       b=st.integers(1, 6), k=st.integers(2, 8),
+       vocab=st.sampled_from((64, 130, 512)),
+       block_v=st.sampled_from((64, 128, 256)),
+       bf16=st.booleans())
+def test_fused_verify_property(seed, crit, b, k, vocab, block_v, bf16):
+    """Property pin: kernel == oracle == Acceptor for arbitrary shapes,
+    criteria, dtypes and vocab tilings."""
+    _check_fused_verify(seed, crit, b, k, vocab,
+                        jnp.bfloat16 if bf16 else jnp.float32,
+                        block_v=block_v)
+
+
+# ---------------------------------------------------------------------------
+# tree_verify_attention
+# ---------------------------------------------------------------------------
+
+
+def _tree_case(b, kq, h, kvh, hd, l, fanout, seed=11):
+    """KV cache whose per-row slots [length, length+kq) hold this block's
+    tree nodes (written at chain storage positions, RoPE'd by depth)."""
+    rng = np.random.default_rng(seed)
+    topo = default_tree(kq, fanout)
+    q = jnp.asarray(rng.normal(size=(b, kq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, l, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, l, kvh, hd)), jnp.float32)
+    length = jnp.asarray(rng.integers(kq, l - kq, size=(b,)), jnp.int32)
+    depths = jnp.asarray(topo.depths)
+    q_pos = length[:, None] + depths[None, :]
+    slot = jnp.arange(l)[None, :]
+    node = slot - length[:, None]
+    is_tree = (node >= 0) & (node < kq)
+    kv_node = jnp.where(is_tree, node, -1).astype(jnp.int32)
+    kv_pos = jnp.where(
+        slot < length[:, None], slot,
+        jnp.where(is_tree,
+                  length[:, None] + depths[jnp.clip(node, 0, kq - 1)],
+                  -1)).astype(jnp.int32)
+    anc = jnp.broadcast_to(jnp.asarray(topo.anc_bits)[None, :], (b, kq))
+    return q, k, v, q_pos, kv_pos, kv_node, anc
+
+
+@pytest.mark.parametrize("b,kq,h,kvh,hd,l,fanout,window,block_kv", [
+    (2, 8, 4, 2, 16, 48, 4, 0, 16),     # GQA
+    (1, 4, 4, 4, 24, 33, 2, 12, 16),    # MHA + sliding window, ragged hd/L
+    (3, 8, 8, 2, 32, 64, 7, 0, 32),     # full-fanout star
+    (1, 2, 2, 1, 64, 40, 1, 0, 512),    # MQA chain-like tree, one block
+])
+def test_tree_verify_attention_sweep(b, kq, h, kvh, hd, l, fanout, window,
+                                     block_kv):
+    q, k, v, q_pos, kv_pos, kv_node, anc = _tree_case(b, kq, h, kvh, hd, l,
+                                                      fanout)
+    got = ops.tree_verify_attention(q, k, v, q_pos, kv_pos, kv_node, anc,
+                                    window=window, block_kv=block_kv)
+    want = ref.tree_verify_attention(q, k, v, q_pos, kv_pos, kv_node, anc,
+                                     window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+def test_tree_verify_chain_degenerates_to_verify_attention():
+    """A pure-chain topology's ancestor mask IS the causal mask — the tree
+    kernel must match the standard verify kernel exactly."""
+    b, kq, h, kvh, hd, l = 2, 6, 4, 2, 32, 40
+    topo = TreeTopology((-1,) + tuple(range(kq - 1)))    # 0<-1<-2<-...
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(b, kq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, l, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, l, kvh, hd)), jnp.float32)
+    length = jnp.asarray([10, 17], jnp.int32)
+    q_pos = length[:, None] + jnp.arange(kq)[None, :]
+    slot = jnp.arange(l)[None, :]
+    node = slot - length[:, None]
+    is_tree = (node >= 0) & (node < kq)
+    kv_node = jnp.where(is_tree, node, -1).astype(jnp.int32)
+    kv_pos = jnp.where(slot < length[:, None] + kq, slot, -1).astype(jnp.int32)
+    anc = jnp.broadcast_to(jnp.asarray(topo.anc_bits)[None, :], (b, kq))
+    got = ops.tree_verify_attention(q, k, v, q_pos, kv_pos, kv_node, anc,
+                                    block_kv=16)
+    want = ops.verify_attention(q, k, v, q_pos, kv_pos, block_kv=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
 
 
 def test_fused_heads_matches_model_argmax():

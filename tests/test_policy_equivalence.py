@@ -291,6 +291,99 @@ def test_paged_engine_shares_identical_prefixes(stack):
 
 
 # ---------------------------------------------------------------------------
+# Fused verification fast path (DecodeConfig.fused_verify) + tree + carry-over
+# ---------------------------------------------------------------------------
+
+
+def _decode_once(stack, pol, *, fused=False, policy_obj=None, mesh=None,
+                 seed=31, max_new=12):
+    cfg, params, dec, bundles = stack
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size, size=(3, 5))
+    d = dec.replace(max_new_tokens=max_new, fused_verify=fused)
+    sess = DecodeSession(params, cfg, d, policy=policy_obj or pol, mesh=mesh,
+                         bundles=bundles if pol == "draft_model" else None)
+    batch = {"tokens": jnp.asarray(prompts)}
+    if pol == "input_copy":
+        batch["src"] = jnp.asarray(prompts)
+    out, stats = sess.decode(batch)
+    return np.asarray(out), np.asarray(stats["iterations"])
+
+
+@pytest.mark.parametrize("pol", ["exact", "topk", "distance", "input_copy",
+                                 "topk_tree", "draft_model"])
+def test_fused_verify_token_identical(stack, pol):
+    """The one-pass Pallas accept kernel (fused_verify=True) is a drop-in:
+    tokens AND iteration counts match the unfused acceptor path for every
+    policy, including tree verification and the draft-model drafter."""
+    out0, it0 = _decode_once(stack, pol, fused=False)
+    out1, it1 = _decode_once(stack, pol, fused=True)
+    np.testing.assert_array_equal(out0, out1)
+    np.testing.assert_array_equal(it0, it1)
+
+
+def test_tree_verification_lossless(stack):
+    """Tree verification commits exactly the greedy stream: topk_tree
+    tokens == exact tokens (drafters move iteration counts, never tokens
+    under exact acceptance — now across a branching candidate tree)."""
+    out_exact, _ = _decode_once(stack, "exact")
+    out_tree, _ = _decode_once(stack, "topk_tree")
+    np.testing.assert_array_equal(out_tree, out_exact)
+
+
+def test_draft_carry_over_token_identical_fewer_steps(stack):
+    """Suffix carry-over folds the catch-up token into the first draft
+    extension: token-identical to the legacy k-step draft loop with
+    strictly fewer sequential draft-model forwards."""
+    from repro.core import decode as D
+    from repro.core import policy as policy_lib
+
+    cfg, params, dec, bundles = stack
+    dcfg = bundles["draft"].cfg
+    calls = {"n": 0}
+
+    def counting_factory(c, kv_chunk):
+        be = D.causal_lm_backend(c, kv_chunk=kv_chunk)
+        inner = be.decode_block
+
+        def counted(p, h, caches, ln, tree=None):
+            calls["n"] += 1
+            return inner(p, h, caches, ln)
+
+        return be._replace(decode_block=counted)
+
+    rng = np.random.default_rng(37)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 5)))}
+    d = dec.replace(max_new_tokens=12, policy="draft_model")
+
+    def run(carry):
+        pol = policy_lib.resolve_policy(d)
+        pol = dataclasses.replace(
+            pol, drafter=dataclasses.replace(pol.drafter, carry_over=carry))
+        b = {"draft": ModelBundle(bundles["draft"].params, dcfg,
+                                  backend_factory=counting_factory)}
+        calls["n"] = 0
+        with jax.disable_jit():   # count real calls, not traces
+            toks, stats = D.bpd_decode(params, cfg, d, batch, policy=pol,
+                                       bundles=b)
+        return np.asarray(toks), int(stats["iterations"]), calls["n"]
+
+    t_new, it_new, n_new = run(True)
+    t_old, it_old, n_old = run(False)
+    np.testing.assert_array_equal(t_new, t_old)
+    assert it_new == it_old
+    assert n_new < n_old, (n_new, n_old)
+    # per-iteration: k-1 vs k sequential draft forwards
+    from repro.core.draft import DraftModelDrafter
+
+    drafter = DraftModelDrafter()
+    k = d.block_k
+    assert drafter.draft_steps_per_iter(k) == k - 1
+    assert dataclasses.replace(
+        drafter, carry_over=False).draft_steps_per_iter(k) == k
+
+
+# ---------------------------------------------------------------------------
 # Sharded variant (CI `sharded` job; skips on 1-device hosts)
 # ---------------------------------------------------------------------------
 
@@ -377,6 +470,26 @@ def test_paged_engine_sharded_token_identical(stack, mesh):
         assert any(e for e in tbl.sharding.spec), (g.name, tbl.sharding)
         g.pages.check_invariants()
         assert g.pages.live_pages() == 0, g.name
+
+
+@pytest.mark.sharded
+@pytest.mark.parametrize("pol", ["exact", "topk", "topk_tree"])
+def test_fused_verify_sharded_token_identical(stack, mesh, pol):
+    """fused_verify on a 2×2 ("data", "model") mesh: the Pallas accept
+    kernel (interpret mode on host devices) under GSPMD still matches the
+    unfused single-device decode byte-for-byte."""
+    out0, it0 = _decode_once(stack, pol, fused=False)
+    out1, it1 = _decode_once(stack, pol, fused=True, mesh=mesh)
+    np.testing.assert_array_equal(out0, out1)
+    np.testing.assert_array_equal(it0, it1)
+
+
+@pytest.mark.sharded
+def test_tree_verification_sharded_lossless(stack, mesh):
+    """Tree verification on the 2×2 mesh == single-device exact tokens."""
+    out_exact, _ = _decode_once(stack, "exact")
+    out_tree, _ = _decode_once(stack, "topk_tree", mesh=mesh)
+    np.testing.assert_array_equal(out_tree, out_exact)
 
 
 @pytest.mark.sharded

@@ -202,17 +202,30 @@ def test_khat_monotone_under_tightened_distance(seed, e1, e2):
 
 def test_legacy_verify_shims_delegate_and_warn():
     """The criterion-string entry points still match the policy objects
-    bit-for-bit but emit DeprecationWarning (migration pin)."""
+    bit-for-bit and emit DeprecationWarning exactly ONCE per process per
+    shim — decode loops call them per iteration (migration pin)."""
+    import warnings as _warnings
+
     from repro.core import verify as legacy
 
+    legacy._WARNED.clear()
     props = jnp.asarray([[7, 4, 5, 6]])
     logits = _logits_for([[4, 5, 9, 0]])
     dec = DecodeConfig(criterion="exact")
-    with pytest.warns(DeprecationWarning, match="position_accepts"):
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always")
         acc = legacy.position_accepts(props, logits, dec)
+        acc2 = legacy.position_accepts(props, logits, dec)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "position_accepts" in str(dep[0].message)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc2))
     np.testing.assert_array_equal(np.asarray(acc),
                                   np.asarray(position_accepts(props, logits,
                                                               dec)))
-    with pytest.warns(DeprecationWarning, match="accepted_block_size"):
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always")
         khat = legacy.accepted_block_size(acc, dec, jnp.asarray([100]))
+        legacy.accepted_block_size(acc, dec, jnp.asarray([100]))
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "accepted_block_size" in str(dep[0].message)
     assert int(khat[0]) == 3
