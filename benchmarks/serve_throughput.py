@@ -449,8 +449,17 @@ def main():
         "paged_compile_counts": pcc,
         "config": res["config"],
     }
-    with open(os.path.join(REPO_ROOT, "BENCH_serve.json"), "w") as f:
-        json.dump(bench, f, indent=2, default=str)
+    # merge-write: BENCH_serve.json is shared with slo_harness.py (the
+    # slo_* keys) — each benchmark owns its keys and must not clobber the
+    # other's rows
+    path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update(bench)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2, default=str)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,440 @@
+"""SLO harness: replayed traffic through the REAL HTTP/SSE server.
+
+Where serve_throughput.py measures the engine in-process, this harness
+measures the whole serving stack the way a user feels it: requests arrive
+over a TCP socket on Poisson and bursty schedules, stream tokens back as
+SSE events, get rejected with 429 + Retry-After when the wait queue
+saturates (clients honor the hint and retry), and preempt lower-priority
+work when a deadline demands it.  Two metric families come out, per trace:
+
+  * TTFT — time to first token, measured from the FIRST send attempt (so
+    back-pressure retries count against the server, as they do for users);
+  * TPOT — time per output token after the first (streaming cadence).
+
+both as p50/p99 over the trace, plus preemption / 429 / requeue counts.
+
+The **quality gate** makes this a correctness harness too: every streamed
+token sequence must be byte-identical to an in-process engine run of the
+same request — including requests that were preempted mid-flight,
+requeued by ``PagePoolExhausted``, or 429-retried.  A latency optimisation
+that perturbs decode results fails here, not in production.
+
+The bursty trace is engineered, not sampled: burst 0 overfills the slot
+slab + wait queue (forcing 429s), then a late wave of priority-1,
+deadline-already-passed requests lands while every slot is still busy
+(forcing preemption).  The Poisson trace is the honest open-loop load.
+
+    PYTHONPATH=src python benchmarks/slo_harness.py [--smoke]
+
+``--smoke`` is the CI configuration: seconds-scale traces with the gates
+enforced (quality identical, preemption + back-pressure actually
+exercised, SLO rows present); results merge into BENCH_serve.json as the
+``slo_*`` keys (serve_throughput.py owns the other keys).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.config import DecodeConfig, ModelConfig
+from repro.models import model as M
+from repro.serving import (
+    ContinuousBatchingEngine,
+    EngineConfig,
+    Frontend,
+    HTTPServer,
+    Request,
+    Scheduler,
+)
+from repro.serving.types import percentile
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MAX_RETRIES = 100
+
+
+def bench_model(smoke: bool) -> ModelConfig:
+    if smoke:
+        return ModelConfig(name="slo-smoke", num_layers=2, d_model=64,
+                           num_heads=4, num_kv_heads=2, d_ff=128,
+                           vocab_size=97, bpd_k=4, max_seq_len=512,
+                           dtype="float32")
+    return ModelConfig(name="slo-bench", num_layers=4, d_model=256,
+                       num_heads=8, num_kv_heads=4, d_ff=512,
+                       vocab_size=512, bpd_k=8, max_seq_len=2048,
+                       dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# Traces: lists of request specs {offset, prompt, max_new, priority,
+# deadline_s} replayed against the live server
+# ---------------------------------------------------------------------------
+
+
+def _spec(rng, offset, vocab, prompt_lens, max_new, priority=0,
+          deadline_s=None):
+    return {"offset": float(offset),
+            "prompt": [int(t) for t in rng.integers(
+                0, vocab, size=int(rng.integers(*prompt_lens)))],
+            "max_new": int(max_new), "priority": priority,
+            "deadline_s": deadline_s}
+
+
+def make_poisson(rng, n, rate, vocab, prompt_lens, budgets):
+    """Open-loop Poisson arrivals; a slice of traffic is latency-sensitive
+    (priority 1 with a deadline) so preemption can fire under load."""
+    offsets = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    out = []
+    for i in range(n):
+        urgent = rng.random() < 0.2
+        out.append(_spec(rng, offsets[i], vocab, prompt_lens,
+                         rng.choice(budgets),
+                         priority=1 if urgent else 0,
+                         deadline_s=0.0 if urgent else None))
+    return out
+
+
+def make_bursty(rng, slots, max_queue, vocab, prompt_lens, budgets):
+    """Adversarial burst: overfill slots + wait queue at t=0.  The whole
+    burst lands before the serve loop can retire anything, so at least
+    two requests meet a full queue and get 429 + Retry-After (which the
+    clients honor — their TTFT keeps counting)."""
+    return [_spec(rng, 0.0, vocab, prompt_lens, max(budgets))
+            for _ in range(slots + max_queue + 2)]
+
+
+def make_preempt(rng, slots, cap, vocab, prompt_lens, budgets):
+    """Deterministic preemption: exactly ``slots`` low-priority requests
+    with the FULL generation budget (so no slot can finish early), then
+    urgent priority-1 requests whose deadline is already in the past.
+    The urgent clients gate on the server's own metrics (``after_busy``):
+    they submit only once every slot is observably occupied and the wait
+    queue is empty — the next scheduler tick then has no free slot and no
+    natural admission, so the deadline check MUST evict a victim."""
+    out = [_spec(rng, 0.0, vocab, prompt_lens, cap) for _ in range(slots)]
+    out += [dict(_spec(rng, 0.0, vocab, prompt_lens, min(budgets),
+                       priority=1, deadline_s=0.0), after_busy=True)
+            for _ in range(2)]
+    return out
+
+
+def make_paged(rng, cap, vocab, prompt_lens):
+    """Pool back-pressure: three simultaneous FULL-BUDGET requests against
+    a paged server whose pool fits exactly one worst-case request — the
+    page spans of any two overlap the pool, so admissions two and three
+    hit ``PagePoolExhausted`` and requeue (``backpressure_requeues``)
+    until the running request retires and releases its pages."""
+    return [_spec(rng, 0.0, vocab, prompt_lens, cap) for _ in range(3)]
+
+
+# ---------------------------------------------------------------------------
+# SSE client: one coroutine per request, honoring Retry-After on 429
+# ---------------------------------------------------------------------------
+
+
+async def sse_client(host, port, spec, t0, results, frontend=None):
+    loop = asyncio.get_running_loop()
+    await asyncio.sleep(max(0.0, t0 + spec["offset"] - loop.time()))
+    if spec.get("after_busy"):
+        # submit only once every slot is occupied and the queue is empty
+        # (see make_preempt) — bounded so a server bug fails, not hangs
+        deadline = loop.time() + 30.0
+        while True:
+            m = frontend.metrics()
+            if (m["active_slots"] >= m["num_slots"]
+                    and m["queue_depth"] == 0):
+                break
+            if loop.time() > deadline:
+                raise RuntimeError("after_busy: slots never filled")
+            await asyncio.sleep(0.002)
+    first_attempt = loop.time()
+    retries = 0
+    while True:
+        body = json.dumps({
+            "prompt": spec["prompt"], "max_new": spec["max_new"],
+            "priority": spec["priority"], "deadline_s": spec["deadline_s"],
+            "stream": True}).encode()
+        reader, writer = await asyncio.open_connection(host, port)
+        writer.write(b"POST /v1/generate HTTP/1.1\r\n"
+                     + f"Host: {host}\r\n".encode()
+                     + f"Content-Length: {len(body)}\r\n\r\n".encode()
+                     + body)
+        await writer.drain()
+        status_line = (await reader.readline()).decode()
+        status = int(status_line.split(" ", 2)[1])
+        if status == 429:
+            rest = (await reader.read()).decode()
+            writer.close()
+            retry_after = json.loads(rest.rsplit("\r\n\r\n", 1)[-1]
+                                     )["retry_after_s"]
+            retries += 1
+            if retries > MAX_RETRIES:
+                raise RuntimeError(f"request gave up after {retries} 429s")
+            await asyncio.sleep(retry_after)
+            continue
+        assert status == 200, f"unexpected response: {status_line!r}"
+        tokens, first_tok_t, last_tok_t, done, cur = [], None, None, None, ""
+        while True:
+            line = (await reader.readline()).decode()
+            if not line:
+                break
+            line = line.strip()
+            if line.startswith("event: "):
+                cur = line[7:]
+            elif line.startswith("data: "):
+                now = loop.time()
+                d = json.loads(line[6:])
+                if cur == "token":
+                    first_tok_t = first_tok_t or now
+                    last_tok_t = now
+                    tokens.extend(d["tokens"])
+                elif cur == "done":
+                    done = d
+        writer.close()
+        assert done is not None, "stream ended without a done event"
+        assert tokens == done["tokens"], \
+            "SSE token events disagree with the done payload"
+        results.append({
+            "spec": spec, "tokens": tokens, "retries": retries,
+            "preempted": done["preempted"],
+            "ttft_s": first_tok_t - first_attempt,
+            "tpot_s": ((last_tok_t - first_tok_t)
+                       / max(len(tokens) - 1, 1)),
+            "latency_s": last_tok_t - first_attempt,
+        })
+        return
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_server(params, cfg, dec, ecfg, max_queue):
+    engine = ContinuousBatchingEngine(params, cfg, dec, ecfg)
+    sched = Scheduler(engine)
+    return HTTPServer(Frontend(sched, max_queue=max_queue), port=0)
+
+
+def build_paged_server(params, cfg, dec, ecfg, max_queue):
+    """Paged-KV server whose page pool fits exactly ONE worst-case request
+    (plus the trash page): concurrent admissions MUST hit
+    ``PagePoolExhausted`` and requeue — the pool back-pressure path."""
+    import dataclasses
+
+    from repro.models import cache as cache_lib
+
+    decp = dec.replace(cache_backend="paged", page_size=8)
+    context_len = (cfg.num_meta_tokens + ecfg.max_prompt_len
+                   + ecfg.max_new_cap)
+    pages = 1 + cache_lib.pages_per_row(context_len, decp.block_k
+                                        or cfg.bpd_k, decp.page_size)
+    ecfgp = dataclasses.replace(ecfg, page_pool_pages=pages)
+    engine = ContinuousBatchingEngine(params, cfg, decp, ecfgp)
+    sched = Scheduler(engine)
+    return HTTPServer(Frontend(sched, max_queue=max_queue), port=0)
+
+
+async def replay(srv, specs):
+    """Replay one trace against the live server; returns per-request
+    results + the server-side counter deltas for this trace."""
+    m0 = srv.frontend.metrics()
+    results = []
+    t0 = asyncio.get_running_loop().time() + 0.05
+    wall0 = time.monotonic()
+    await asyncio.gather(*(sse_client(srv.host, srv.port, s, t0, results,
+                                      frontend=srv.frontend)
+                           for s in specs))
+    wall = time.monotonic() - wall0
+    m1 = srv.frontend.metrics()
+    return results, {
+        "requests": len(specs),
+        "ttft_p50_s": percentile([r["ttft_s"] for r in results], 50),
+        "ttft_p99_s": percentile([r["ttft_s"] for r in results], 99),
+        "tpot_p50_s": percentile([r["tpot_s"] for r in results], 50),
+        "tpot_p99_s": percentile([r["tpot_s"] for r in results], 99),
+        "latency_p50_s": percentile([r["latency_s"] for r in results], 50),
+        "latency_p99_s": percentile([r["latency_s"] for r in results], 99),
+        "tokens_per_sec": sum(len(r["tokens"]) for r in results) / wall,
+        "rejected_429": int(m1["rejected_total"] - m0["rejected_total"]),
+        "rejected_429_rate": (m1["rejected_total"] - m0["rejected_total"])
+                             / max(len(specs), 1),
+        "client_retries": sum(r["retries"] for r in results),
+        "preemptions": int(m1["preemptions_total"]
+                           - m0["preemptions_total"]),
+        "preempted_requests": sum(1 for r in results if r["preempted"]),
+        "backpressure_requeues": int(m1["backpressure_requeues_total"]
+                                     - m0["backpressure_requeues_total"]),
+        "wall_seconds": wall,
+    }
+
+
+def reference_tokens(params, cfg, dec, ecfg, all_specs):
+    """In-process engine run of every unique request — the quality oracle.
+    No HTTP, no priorities, no preemption: plain FCFS decode of the same
+    prompts, which the served streams must match token-for-token."""
+    eng = ContinuousBatchingEngine(params, cfg, dec, ecfg)
+    sched = Scheduler(eng)
+    keyed = {}
+    for s in all_specs:
+        keyed[(tuple(s["prompt"]), s["max_new"])] = None
+    for rid, key in enumerate(keyed):
+        sched.submit(Request(rid=rid, prompt=np.asarray(key[0], np.int32),
+                             max_new=key[1]))
+    for f in sched.run():
+        key = list(keyed)[f.rid]
+        keyed[key] = [int(t) for t in f.tokens]
+    return keyed
+
+
+def quality_gate(results, ref):
+    """Every streamed sequence must equal its in-process reference —
+    returns the number of compared requests (raises on any mismatch)."""
+    for r in results:
+        key = (tuple(r["spec"]["prompt"]), r["spec"]["max_new"])
+        if r["tokens"] != ref[key]:
+            raise SystemExit(
+                f"QUALITY GATE FAILED: served stream "
+                f"(preempted={r['preempted']}, retries={r['retries']}) "
+                f"diverged from the in-process engine run\n"
+                f"  served: {r['tokens']}\n  engine: {ref[key]}")
+    return len(results)
+
+
+async def run(smoke: bool, seed: int) -> dict:
+    cfg = bench_model(smoke)
+    slots = 2 if smoke else 4
+    max_queue = 4 if smoke else 16
+    budgets = (6, 12) if smoke else (8, 32, 64)
+    n_poisson = 10 if smoke else 64
+    rate = 4.0 if smoke else 20.0
+    ecfg = EngineConfig(num_slots=slots,
+                        max_prompt_len=24 if smoke else 96,
+                        max_new_cap=max(budgets))
+    dec = DecodeConfig(max_new_tokens=ecfg.max_new_cap, block_k=cfg.bpd_k)
+    prompt_lens = (4, 9) if smoke else (16, 33)
+    params = M.init(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+
+    poisson = make_poisson(rng, n_poisson, rate, cfg.vocab_size,
+                           prompt_lens, budgets)
+    bursty = make_bursty(rng, slots, max_queue, cfg.vocab_size,
+                         prompt_lens, budgets)
+    preempt = make_preempt(rng, slots, ecfg.max_new_cap, cfg.vocab_size,
+                           prompt_lens, budgets)
+    paged = make_paged(rng, ecfg.max_new_cap, cfg.vocab_size, prompt_lens)
+
+    srv = build_server(params, cfg, dec, ecfg, max_queue)
+    await srv.start()
+    # warm the compile caches outside the measured traces
+    warm = [_spec(rng, 0.0, cfg.vocab_size, prompt_lens, 2)]
+    await replay(srv, warm)
+    try:
+        p_results, p_stats = await replay(srv, poisson)
+        b_results, b_stats = await replay(srv, bursty)
+        pre_results, pre_stats = await replay(srv, preempt)
+    finally:
+        await srv.stop()
+
+    srv2 = build_paged_server(params, cfg, dec, ecfg, max_queue)
+    await srv2.start()
+    warm2 = [_spec(rng, 0.0, cfg.vocab_size, prompt_lens, 2)]
+    await replay(srv2, warm2)      # paged fns compile outside the trace
+    try:
+        pg_results, pg_stats = await replay(srv2, paged)
+    finally:
+        await srv2.stop()
+
+    ref = reference_tokens(params, cfg, dec, ecfg,
+                           warm + warm2 + poisson + bursty + preempt + paged)
+    compared = sum(quality_gate(r, ref) for r in
+                   (p_results, b_results, pre_results, pg_results))
+
+    traces = {"slo_poisson": p_stats, "slo_bursty": b_stats,
+              "slo_preempt": pre_stats, "slo_paged": pg_stats}
+    return {
+        "slo_config": {"model": cfg.name, "smoke": smoke, "slots": slots,
+                       "max_queue": max_queue, "budgets": list(budgets),
+                       "poisson_requests": n_poisson, "poisson_rate": rate,
+                       "bursty_requests": len(bursty), "seed": seed},
+        **traces,
+        "slo_quality_compared": compared,
+        "slo_quality_identical": True,       # quality_gate raised otherwise
+        "slo_preemptions_total": sum(t["preemptions"]
+                                     for t in traces.values()),
+        "slo_rejected_429_total": sum(t["rejected_429"]
+                                      for t in traces.values()),
+        "slo_backpressure_requeues_total": sum(t["backpressure_requeues"]
+                                               for t in traces.values()),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run with the gates enforced")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    res = asyncio.run(run(args.smoke, args.seed))
+
+    traces = ("slo_poisson", "slo_bursty", "slo_preempt", "slo_paged")
+    for trace in traces:
+        st = res[trace]
+        for key in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+                    "tokens_per_sec", "rejected_429", "client_retries",
+                    "preemptions", "backpressure_requeues"):
+            print(f"serve/{trace}/{key},{st[key]},", flush=True)
+    print(f"serve/slo_quality,"
+          f"identical_over_{res['slo_quality_compared']}_requests,ok")
+
+    # CI gates: the serving layer must actually exercise its failure paths
+    # in this harness (otherwise the quality gate proves nothing about
+    # preemption/back-pressure), and streams must be correct
+    if res["slo_preemptions_total"] < 1:
+        raise SystemExit("SLO GATE: no preemption occurred — the preempt "
+                         "trace must evict at least one low-priority slot")
+    if res["slo_rejected_429_total"] < 1:
+        raise SystemExit("SLO GATE: no 429 was served — the bursty trace "
+                         "must saturate the wait queue")
+    if res["slo_backpressure_requeues_total"] < 1:
+        raise SystemExit("SLO GATE: no PagePoolExhausted requeue — the "
+                         "paged trace must oversubscribe its page pool")
+    for trace in traces:
+        st = res[trace]
+        if not (st["ttft_p99_s"] > 0 and st["tpot_p99_s"] > 0):
+            raise SystemExit(f"SLO GATE: {trace} has degenerate TTFT/TPOT "
+                             f"percentiles: {st}")
+    if args.smoke:
+        st = res["slo_bursty"]
+        if st["ttft_p99_s"] > 60.0 or st["tpot_p99_s"] > 5.0:
+            raise SystemExit(
+                f"SLO GATE: smoke latency out of bounds — TTFT p99 "
+                f"{st['ttft_p99_s']:.2f}s (<= 60s), TPOT p99 "
+                f"{st['tpot_p99_s']:.3f}s (<= 5s): a tiny model on CI "
+                f"hardware should be far inside these")
+
+    os.makedirs("experiments", exist_ok=True)
+    name = "slo_harness_smoke" if args.smoke else "slo_harness"
+    with open(f"experiments/{name}.json", "w") as f:
+        json.dump(res, f, indent=2, default=str)
+
+    if not args.smoke:
+        return
+    # merge the slo_* rows into the tracked perf-trajectory artifact;
+    # serve_throughput.py owns the other keys (same merge discipline there)
+    path = os.path.join(REPO_ROOT, "BENCH_serve.json")
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update(res)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -64,9 +64,10 @@ def get_policy(dec, policy=None):
     (CLI: ``launch/serve.py --fused-verify``) swaps every builder's
     acceptor to the one-pass Pallas accept kernel
     (``kernels/fused_verify``) — token-identical, so policies resolve the
-    same tokens with it on or off.  The criterion-string shims in
-    ``repro.core.verify`` (``position_accepts`` / ``accepted_block_size``)
-    are deprecated and warn once per process — don't add new call sites.
+    same tokens with it on or off.  The criterion-string shims that used
+    to live in ``repro.core.verify`` (``position_accepts`` /
+    ``accepted_block_size``) are REMOVED — they raise ValueError pointing
+    back here; this function is the only policy resolution path.
     """
     from repro.core.policy import resolve_policy
 

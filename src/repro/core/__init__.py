@@ -31,6 +31,7 @@ from repro.core.policy import (
 )
 from repro.core.bundle import ModelBundle
 from repro.core.draft import DraftModelDrafter
+# removed criterion-string entry points: importable, raise with migration
 from repro.core.verify import accepted_block_size, position_accepts
 from repro.core.decode import (
     Backend,

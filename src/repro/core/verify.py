@@ -1,16 +1,23 @@
-"""Verification criteria (paper §3 exact match, §5.1 top-k, §5.2 distance,
-§5.3 minimum block size) — legacy functional entry points, DEPRECATED.
+"""Verification criteria — REMOVED legacy entry points.
 
-The implementations live in ``core.policy`` as first-class ``Acceptor`` /
-``BlockSchedule`` objects; these wrappers keep the original
-criterion-string API (and the seed tests) working by resolving
-``dec.criterion`` through the policy registry.  New code should construct
-a ``DecodePolicy`` via ``repro.config.get_policy(dec)`` (see its docstring
-for the blessed path) and call ``policy.acceptor.accepts(...)`` /
-``policy.schedule.block_size(...)`` directly — both wrappers below emit a
-``DeprecationWarning``.
+The paper's acceptance criteria (§3 exact match, §5.1 top-k, §5.2
+distance, §5.3 minimum block size) live in ``core.policy`` as first-class
+``Acceptor`` / ``BlockSchedule`` objects, composed into a ``DecodePolicy``
+and resolved through ``repro.config.get_policy`` — the one blessed path.
+The criterion-string wrappers that used to live here (``position_accepts``
+/ ``accepted_block_size``) warned for a release cycle and are now hard
+errors: every internal call site is on ``DecodePolicy``, and keeping two
+entry points alive meant every acceptance change had to be proven twice.
 
-Index convention for one BPD iteration (0-based within the block):
+Migration (the error message repeats it):
+
+    from repro.config import get_policy
+    policy = get_policy(dec)                       # or get_policy(dec, name)
+    accepts = policy.acceptor.accepts(proposals, p1_logits)
+    khat, state = policy.schedule.block_size(accepts, remaining, state)
+
+Index convention for one BPD iteration (0-based within the block) — still
+the contract of ``Acceptor.accepts``:
   * ``proposals[:, i]`` is the token proposed for absolute position j+1+i.
   * The verify forward feeds the k proposals; its p_1 output at block slot
     i covers context ŷ_{≤ j+1+i}, i.e. it is the greedy distribution for
@@ -21,59 +28,23 @@ Index convention for one BPD iteration (0-based within the block):
 """
 from __future__ import annotations
 
-import warnings
 
-import jax.numpy as jnp
-
-from repro.config import DecodeConfig
-from repro.core.policy import StaticSchedule, resolve_policy
-
-# Each shim warns once per process: decode loops call these per iteration,
-# and a warning per call drowns the signal that should prompt migration.
-_WARNED: set = set()
+def _removed(name: str, call: str) -> ValueError:
+    return ValueError(
+        f"repro.core.verify.{name} was removed: the criterion-string API "
+        f"is gone.  Resolve a DecodePolicy via repro.config.get_policy(dec)"
+        f" and call {call} instead.")
 
 
-def _warn_once(name: str, message: str) -> None:
-    if name in _WARNED:
-        return
-    _WARNED.add(name)
-    warnings.warn(message, DeprecationWarning, stacklevel=3)
+def position_accepts(*_args, **_kwargs):
+    """REMOVED — use ``get_policy(dec).acceptor.accepts(proposals,
+    p1_logits)``."""
+    raise _removed("position_accepts",
+                   "policy.acceptor.accepts(proposals, p1_logits)")
 
 
-def position_accepts(proposals: jnp.ndarray, p1_logits: jnp.ndarray,
-                     dec: DecodeConfig) -> jnp.ndarray:
-    """Per-position acceptance decisions (before the prefix AND).
-
-    .. deprecated:: use ``get_policy(dec).acceptor.accepts(proposals,
-       p1_logits)`` — the criterion-string shim will be removed.
-
-    proposals : (B, k) int32
-    p1_logits : (B, k, V) — p_1 logits at block slots 0..k-1
-    returns   : (B, k) bool; column 0 is always True.
-    """
-    _warn_once(
-        "position_accepts",
-        "repro.core.verify.position_accepts is deprecated; resolve a "
-        "DecodePolicy (repro.config.get_policy) and call "
-        "policy.acceptor.accepts(proposals, p1_logits)")
-    return resolve_policy(dec).acceptor.accepts(proposals, p1_logits)
-
-
-def accepted_block_size(accepts: jnp.ndarray, dec: DecodeConfig,
-                        remaining: jnp.ndarray) -> jnp.ndarray:
-    """k̂ per row: longest accepted prefix, with §5.3 minimum block size,
-    clamped to the tokens still allowed (``remaining``, (B,) int32).
-
-    .. deprecated:: use ``get_policy(dec).schedule.block_size(accepts,
-       remaining, state)`` — the criterion-string shim will be removed.
-
-    accepts: (B, k) bool -> (B,) int32 in [1, k] (before remaining clamp).
-    """
-    _warn_once(
-        "accepted_block_size",
-        "repro.core.verify.accepted_block_size is deprecated; resolve a "
-        "DecodePolicy (repro.config.get_policy) and call "
-        "policy.schedule.block_size(accepts, remaining, state)")
-    khat, _ = StaticSchedule(min_block=dec.min_block).block_size(
-        accepts, remaining, ())
-    return khat
+def accepted_block_size(*_args, **_kwargs):
+    """REMOVED — use ``get_policy(dec).schedule.block_size(accepts,
+    remaining, state)``."""
+    raise _removed("accepted_block_size",
+                   "policy.schedule.block_size(accepts, remaining, state)")

@@ -112,6 +112,24 @@ def main():
                          "--policy/--criterion session default")
     ap.add_argument("--sched", default="fcfs", choices=["fcfs", "sjf"],
                     help="engine admission policy (scheduler)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve the continuous-batching engine over "
+                         "HTTP/SSE (POST /v1/generate streams token "
+                         "events; /healthz /readyz /metrics) instead of "
+                         "replaying a synthetic workload")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="--http bind address")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="--http bind port (0 = ephemeral, printed on "
+                         "startup)")
+    ap.add_argument("--max-queue", type=int, default=16,
+                    help="--http admission queue bound: requests beyond "
+                         "it are rejected with 429 + Retry-After")
+    ap.add_argument("--http-demo", action="store_true",
+                    help="with --http: boot the server, stream ONE "
+                         "self-request end-to-end (printing the SSE "
+                         "events), check /healthz + /readyz, then exit — "
+                         "the CI smoke mode")
     ap.add_argument("--mesh-data", type=int, default=0,
                     help="data-parallel shards (0 = no mesh, single device)")
     ap.add_argument("--mesh-model", type=int, default=1,
@@ -152,10 +170,16 @@ def main():
         print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices")
 
     groups = parse_policy_groups(args.policies)
-    if groups and not args.engine:
+    if groups and not (args.engine or args.http):
         raise SystemExit("--policies configures per-request slot groups in "
-                         "the continuous-batching engine: add --engine")
+                         "the continuous-batching engine: add --engine "
+                         "(or --http)")
     bundles = draft_bundle(cfg, args, groups)
+
+    if args.http:
+        serve_http(params, cfg, dec, args, mesh=mesh, bundles=bundles,
+                   groups=groups)
+        return
 
     if args.engine:
         serve_engine(params, cfg, dec, args, task, mesh=mesh,
@@ -187,19 +211,34 @@ def main():
 
 def parse_policy_groups(spec: str):
     """'exact=2,topk_tree=2' -> {"exact": 2, "topk_tree": 2} (None when
-    empty).  Slot counts must partition --batch; the engine validates."""
+    empty).  Every error names its fix here, at the flag, instead of
+    surfacing later as an EngineConfig/registry failure mid-compile.
+    Slot counts must partition --batch; the engine validates that part."""
     if not spec:
         return None
+    from repro.config import list_policies
+
+    known = list_policies()
     groups = {}
     for part in spec.split(","):
         name, sep, n = part.strip().partition("=")
-        if not sep or not name or not n.isdigit():
+        if not sep or not name or not n.lstrip("+-").isdigit():
             raise SystemExit(f"--policies entry {part!r}: expected "
-                             f"name=slots")
+                             f"name=slots, e.g. exact=2")
+        if name not in known:
+            raise SystemExit(f"--policies names unknown policy {name!r}: "
+                             f"registered policies are "
+                             f"{', '.join(sorted(known))}")
         if name in groups:
             raise SystemExit(f"--policies names {name!r} twice: one slot "
-                             f"group per policy")
-        groups[name] = int(n)
+                             f"group per policy — merge the counts into a "
+                             f"single {name}=n entry")
+        slots = int(n)
+        if slots <= 0:
+            raise SystemExit(f"--policies entry {part.strip()!r}: slot "
+                             f"count must be a positive integer (every "
+                             f"group needs at least one slot)")
+        groups[name] = slots
     return groups
 
 
@@ -271,6 +310,91 @@ def serve_engine(params, cfg, dec, args, task, *, mesh=None, bundles=None,
         print(f"    req {f.rid} [{f.policy}]: k̂={f.mean_accepted:.2f} "
               f"gen={f.generated} inv={f.invocations} "
               f"out={[int(x) for x in f.tokens]}")
+
+
+def serve_http(params, cfg, dec, args, *, mesh=None, bundles=None,
+               groups=None):
+    """Serve the engine over HTTP/SSE (see serving.server for the routes);
+    ``--http-demo`` instead streams one self-request and exits (CI smoke)."""
+    import asyncio
+
+    from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                               Frontend, HTTPServer, Scheduler)
+
+    ecfg = EngineConfig(num_slots=args.batch,
+                        max_prompt_len=args.prompt_len,
+                        max_new_cap=args.max_new)
+    engine = ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh,
+                                      bundles=bundles, policies=groups)
+    sched = Scheduler(engine, policy=args.sched)
+    srv = HTTPServer(Frontend(sched, max_queue=args.max_queue),
+                     host=args.host, port=args.port)
+
+    async def run():
+        await srv.start()
+        print(f"[serve] http on {srv.host}:{srv.port} — POST /v1/generate, "
+              f"GET /healthz /readyz /metrics "
+              f"(slots={args.batch}, sched={args.sched}, "
+              f"max_queue={args.max_queue})", flush=True)
+        if args.http_demo:
+            await _http_demo(srv)
+            await srv.stop()
+        else:
+            await srv.serve_forever()
+
+    asyncio.run(run())
+
+
+async def _http_demo(srv):
+    """One end-to-end streamed request against the live server, over a
+    real socket: asserts SSE token + done events and green health checks,
+    exiting non-zero on any miss — the CI server-smoke contract."""
+    import asyncio
+    import json
+
+    async def get(path):
+        r, w = await asyncio.open_connection(srv.host, srv.port)
+        w.write(f"GET {path} HTTP/1.1\r\nHost: {srv.host}\r\n\r\n".encode())
+        await w.drain()
+        data = await r.read()
+        w.close()
+        return data.decode()
+
+    for path in ("/healthz", "/readyz"):
+        status = (await get(path)).splitlines()[0]
+        print(f"[serve] {path} -> {status}")
+        if "200" not in status:
+            raise SystemExit(f"--http-demo: {path} returned {status!r}")
+
+    body = json.dumps({"prompt": [5, 6, 7, 8], "max_new": 12,
+                       "stream": True}).encode()
+    r, w = await asyncio.open_connection(srv.host, srv.port)
+    w.write(b"POST /v1/generate HTTP/1.1\r\n"
+            + f"Host: {srv.host}\r\n".encode()
+            + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    await w.drain()
+    raw = (await r.read()).decode()
+    w.close()
+    print("[serve] SSE stream:")
+    print("    " + "\n    ".join(ln for ln in raw.splitlines() if ln))
+    events, cur = [], None
+    for ln in raw.splitlines():
+        if ln.startswith("event: "):
+            cur = ln[7:]
+        elif ln.startswith("data: ") and cur is not None:
+            events.append((cur, json.loads(ln[6:])))
+    tokens = [t for kind, d in events if kind == "token"
+              for t in d["tokens"]]
+    dones = [d for kind, d in events if kind == "done"]
+    if not tokens or not dones:
+        raise SystemExit("--http-demo: stream missing token/done SSE events")
+    done = dones[0]
+    # the done payload repeats the full stream — they must agree exactly
+    if tokens != done["tokens"]:
+        raise SystemExit("--http-demo: streamed tokens disagree with the "
+                         "done payload")
+    print(f"[serve] demo ok: {done['generated']} tokens streamed, "
+          f"k̂={done['mean_accepted']:.2f}")
 
 
 if __name__ == "__main__":

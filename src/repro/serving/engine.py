@@ -63,11 +63,11 @@ import numpy as np
 from repro.config import DecodeConfig, ModelConfig
 from repro.serving.pages import PageAllocator, PagePoolExhausted
 from repro.serving.session import DecodeSession, ServingFns
-from repro.serving.types import (EngineConfig, FinishedRequest, Request,
-                                 SlotBatch)
+from repro.serving.types import (EngineConfig, FinishedRequest,
+                                 PreemptedRequest, Request, SlotBatch)
 
 __all__ = ["ContinuousBatchingEngine", "PolicyGroup", "SlotBatch",
-           "PagePoolExhausted"]
+           "PagePoolExhausted", "PreemptedRequest"]
 
 I32 = jnp.int32
 
@@ -209,6 +209,7 @@ class ContinuousBatchingEngine:
         self.num_admits = 0     # prefill calls — device work accounting
         self.num_steps = 0      # GROUP step calls (model invocations)
         self.num_host_syncs = 0  # device->host readbacks (regression guard)
+        self.num_stream_syncs = 0  # poll_progress readbacks (streaming only)
 
     @property
     def params(self):
@@ -309,7 +310,7 @@ class ContinuousBatchingEngine:
             req.arrival = admit_time
         g.slot_meta[slot] = {
             "req": req, "prompt_len": p, "max_new": max_new,
-            "admit_time": admit_time,
+            "admit_time": admit_time, "emitted": 0,
         }
         return g.offset + slot
 
@@ -381,6 +382,90 @@ class ContinuousBatchingEngine:
             g.state = g.fns.evict(g.state, jnp.asarray(done_mask))
             g.status[done_mask] = 0     # known host-side: freed, inactive
         return out
+
+    # -- streaming + preemption (serving front end) --------------------------
+
+    def poll_progress(self) -> List[Tuple[Request, np.ndarray]]:
+        """Committed-but-unstreamed tokens per ACTIVE slot since the last
+        poll: ``[(request, new_tokens), ...]``.
+
+        This is the streaming read the HTTP/SSE front end runs after each
+        ``step()``; it costs one extra device→host pull per group with
+        active slots (counted in ``num_stream_syncs``, separate from the
+        engine's one-fused-sync-per-group-step contract — callers that
+        never stream never pay it).  A slot that finished in the preceding
+        step was already harvested (its meta is gone); its tail tokens
+        reach the front end through ``FinishedRequest.tokens`` instead.
+        """
+        out: List[Tuple[Request, np.ndarray]] = []
+        for g in self.groups:
+            live = [i for i in range(g.num_slots)
+                    if (g.status[i] & 1) and g.slot_meta[i] is not None]
+            if not live:
+                continue
+            tokens = np.asarray(g.state.tokens)
+            text_len = np.asarray(g.state.text_len)
+            self.num_stream_syncs += 1
+            for i in live:
+                meta = g.slot_meta[i]
+                start = meta["prompt_len"] + meta["emitted"]
+                end = int(text_len[i])
+                if end > start:
+                    out.append((meta["req"], tokens[i, start:end].copy()))
+                    meta["emitted"] = end - meta["prompt_len"]
+        return out
+
+    def pull_group(self, g: PolicyGroup) -> Tuple[np.ndarray, np.ndarray,
+                                                  np.ndarray, np.ndarray]:
+        """One host pull of group ``g``'s per-slot progress arrays
+        ``(tokens, text_len, generated, invocations)`` — the scheduler
+        reads these to pick a preemption victim (feasibility needs
+        ``generated``), then hands them back to ``preempt`` so choosing
+        and evicting cost a single sync together."""
+        pulled = (np.asarray(g.state.tokens), np.asarray(g.state.text_len),
+                  np.asarray(g.state.generated),
+                  np.asarray(g.state.invocations))
+        self.num_host_syncs += 1
+        return pulled
+
+    def preempt(self, g: PolicyGroup, slot: int,
+                pulled=None) -> PreemptedRequest:
+        """Evict the ACTIVE request in group ``g``'s local ``slot`` and
+        return its committed progress for requeueing.
+
+        Mirrors harvest's cleanup exactly (evict + page release + status/
+        meta clear) but for one mid-flight slot: the committed tokens
+        survive in the returned record, uncommitted block proposals are
+        discarded (they live beyond ``text_len`` and were never part of
+        the result stream).  The caller (scheduler) re-admits the request
+        as a continuation whose prompt is ``prompt + tokens`` — the same
+        padded-prefill path as any admission, so the continuation's stream
+        is the decode of the identical committed context.
+
+        ``pulled`` is an optional ``pull_group(g)`` result to reuse (victim
+        selection already paid the sync); None pulls fresh.
+        """
+        if not g.status[slot] & 1 or g.slot_meta[slot] is None:
+            raise RuntimeError(
+                f"preempt: slot {slot} of group {g.name!r} holds no active "
+                f"request")
+        tokens, text_len, generated, invocations = (
+            pulled if pulled is not None else self.pull_group(g))
+        meta = g.slot_meta[slot]
+        rec = PreemptedRequest(
+            req=meta["req"],
+            tokens=tokens[slot, meta["prompt_len"]:int(text_len[slot])].copy(),
+            generated=int(generated[slot]),
+            invocations=int(invocations[slot]),
+            streamed=meta["emitted"])
+        mask = np.zeros((g.num_slots,), bool)
+        mask[slot] = True
+        g.state = g.fns.evict(g.state, jnp.asarray(mask))
+        g.status[slot] = 0
+        g.slot_meta[slot] = None
+        if g.pages is not None:
+            g.pages.release(slot)
+        return rec
 
     # -- diagnostics ---------------------------------------------------------
 

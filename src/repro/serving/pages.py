@@ -146,6 +146,7 @@ class PageAllocator:
         tbl_row = np.zeros((P,), np.int32)
         write_mask = np.zeros((P,), bool)
         mapped: List[int] = []
+        fresh_keys: List[int] = []  # prefixes registered by THIS plan
         for i in range(n_alloc):
             key = None
             # shareable iff entirely covered by prefix + real prompt tokens
@@ -160,7 +161,14 @@ class PageAllocator:
                 continue  # write_mask stays False: bytes already on device
             page = self._grab_page()
             if page is None:
-                for p in mapped:  # roll back this plan entirely
+                # Roll back this plan entirely.  Prefixes registered by
+                # THIS plan must be unregistered first: the admit prefill
+                # never ran, so their bytes don't exist device-side — left
+                # registered they would satisfy a later plan as a CoW hit
+                # (write_mask False) and serve garbage KV.
+                for p in fresh_keys:
+                    del self.prefix_map[self.page_key.pop(p)]
+                for p in mapped:
                     self._decref(p)
                 raise PagePoolExhausted(
                     f"page pool exhausted admitting slot {slot}: needed "
@@ -170,6 +178,7 @@ class PageAllocator:
             if key is not None:  # future identical prefixes share this page
                 self.prefix_map[key] = page
                 self.page_key[page] = key
+                fresh_keys.append(page)
             tbl_row[i] = page
             write_mask[i] = True
             mapped.append(page)

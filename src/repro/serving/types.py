@@ -149,6 +149,14 @@ class Request:
     (``input_copy``); ``None`` defaults to the prompt itself at admission.
     Drafts never change accepted tokens under exact acceptance, so ``src``
     only moves iteration counts.
+
+    ``priority`` orders admission (higher = served first within a group);
+    ``deadline`` is an absolute ``time.monotonic()`` instant by which the
+    request should FINISH.  A queued request whose deadline is at risk may
+    preempt a strictly-lower-priority slot in its group (the victim is
+    evicted and requeued as a continuation — see ``serving.scheduler``).
+    Both default to best-effort (priority 0, no deadline), which preserves
+    the historical fcfs/sjf behavior exactly.
     """
 
     rid: int
@@ -157,6 +165,9 @@ class Request:
     arrival: Optional[float] = None
     policy: Optional[str] = None  # registered policy name; None = default
     src: Optional[np.ndarray] = None  # source tokens for drafting policies
+    priority: int = 0           # admission priority (higher wins)
+    deadline: Optional[float] = None  # absolute finish deadline (monotonic)
+    backpressured: int = 0      # times requeued by PagePoolExhausted
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -178,6 +189,7 @@ class FinishedRequest:
     admit_time: float
     finish_time: float
     policy: str = ""            # decode policy that served this request
+    preempted: int = 0          # times this request was evicted + requeued
 
     @property
     def latency(self) -> float:
@@ -186,6 +198,25 @@ class FinishedRequest:
     @property
     def queue_delay(self) -> float:
         return self.admit_time - self.arrival
+
+
+@dataclasses.dataclass
+class PreemptedRequest:
+    """A mid-flight request evicted from its slot by the scheduler.
+
+    ``tokens`` are the committed tokens of the evicted SEGMENT only (the
+    continuation re-admits with ``prompt + tokens`` as its prompt, so the
+    decode stream continues exactly where it stopped); ``streamed`` counts
+    how many of them the engine's progress polling already emitted, so a
+    streaming front end can forward the unstreamed remainder before the
+    continuation produces new tokens.
+    """
+
+    req: "Request"              # the evicted request (original fields)
+    tokens: np.ndarray          # committed tokens of this segment
+    generated: int              # == len(tokens)
+    invocations: int            # model calls spent on this segment
+    streamed: int               # tokens of this segment already streamed
 
 
 def percentile(values, q: float) -> Optional[float]:

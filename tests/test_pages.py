@@ -120,6 +120,28 @@ def test_exhaustion_rolls_back_and_raises():
     a.check_invariants()
 
 
+def test_failed_plan_unregisters_its_prefix_cache():
+    """Regression: a plan that exhausts the pool mid-way must unregister
+    the prefix pages IT registered — their bytes were never written (the
+    admit prefill never ran), so a later identical prompt must get a
+    writable page, not a phantom CoW hit against garbage KV."""
+    a = _mk(num_pages=5, P=4)             # 4 allocatable pages
+    rng = np.random.default_rng(8)
+    a.plan_admit(0, _prompt(rng, 4), 4, 16)      # 3 pages, 1 left
+    prompt = _prompt(rng, PS)             # first page fully covered
+    with pytest.raises(PagePoolExhausted):
+        a.plan_admit(1, prompt, PS, 8)    # maps 1 (registered), needs 2
+    # the phantom prefix is gone: nothing reclaimable, nothing cached
+    assert not a.prefix_map and not a.page_key and not a.reclaimable
+    a.check_invariants()
+    a.release(0)
+    # retry with the SAME prompt: every mapped page must be written
+    tbl, wm = a.plan_admit(1, prompt, PS, 8)
+    n = a.pages_needed(PS, 8)
+    assert wm[:n].all()
+    a.check_invariants()
+
+
 def test_never_satisfiable_is_config_error_not_backpressure():
     a = _mk(num_pages=4, P=8)
     rng = np.random.default_rng(7)

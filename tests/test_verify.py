@@ -3,9 +3,8 @@ including hypothesis property tests over all three acceptors (skipped on
 minimal installs via the tests/_hyp.py shim).
 
 Exercises the blessed DecodePolicy path (config.get_policy -> acceptor /
-schedule objects); the deprecated criterion-string shims in
-repro.core.verify keep one pinned test asserting they still delegate and
-warn."""
+schedule objects); the removed criterion-string shims in repro.core.verify
+keep one pinned test asserting they fail loudly and name the migration."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -196,36 +195,29 @@ def test_khat_monotone_under_tightened_distance(seed, e1, e2):
 
 
 # ---------------------------------------------------------------------------
-# Deprecated criterion-string shims (repro.core.verify)
+# Removed criterion-string shims (repro.core.verify)
 # ---------------------------------------------------------------------------
 
 
-def test_legacy_verify_shims_delegate_and_warn():
-    """The criterion-string entry points still match the policy objects
-    bit-for-bit and emit DeprecationWarning exactly ONCE per process per
-    shim — decode loops call them per iteration (migration pin)."""
-    import warnings as _warnings
-
+def test_legacy_verify_shims_removed_with_migration_path():
+    """The criterion-string entry points (deprecated since the policy
+    refactor) are hard errors that name ``config.get_policy`` as the
+    blessed path — still importable (so stale call sites fail at the call,
+    with the migration, not at import with a bare AttributeError)."""
     from repro.core import verify as legacy
 
-    legacy._WARNED.clear()
     props = jnp.asarray([[7, 4, 5, 6]])
     logits = _logits_for([[4, 5, 9, 0]])
     dec = DecodeConfig(criterion="exact")
-    with _warnings.catch_warnings(record=True) as caught:
-        _warnings.simplefilter("always")
-        acc = legacy.position_accepts(props, logits, dec)
-        acc2 = legacy.position_accepts(props, logits, dec)
-    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1 and "position_accepts" in str(dep[0].message)
-    np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc2))
-    np.testing.assert_array_equal(np.asarray(acc),
-                                  np.asarray(position_accepts(props, logits,
-                                                              dec)))
-    with _warnings.catch_warnings(record=True) as caught:
-        _warnings.simplefilter("always")
-        khat = legacy.accepted_block_size(acc, dec, jnp.asarray([100]))
-        legacy.accepted_block_size(acc, dec, jnp.asarray([100]))
-    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1 and "accepted_block_size" in str(dep[0].message)
-    assert int(khat[0]) == 3
+    with pytest.raises(ValueError, match="get_policy"):
+        legacy.position_accepts(props, logits, dec)
+    with pytest.raises(ValueError, match="get_policy"):
+        legacy.accepted_block_size(jnp.ones((1, 4), bool), dec,
+                                   jnp.asarray([100]))
+    # the package-level re-exports fail the same way
+    from repro import core as C
+    with pytest.raises(ValueError, match="acceptor.accepts"):
+        C.position_accepts(props, logits, dec)
+    with pytest.raises(ValueError, match="schedule.block_size"):
+        C.accepted_block_size(jnp.ones((1, 4), bool), dec,
+                              jnp.asarray([100]))
