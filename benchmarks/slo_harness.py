@@ -213,13 +213,29 @@ async def sse_client(host, port, spec, t0, results, frontend=None):
 # ---------------------------------------------------------------------------
 
 
-def build_server(params, cfg, dec, ecfg, max_queue):
-    engine = ContinuousBatchingEngine(params, cfg, dec, ecfg)
+def build_server(params, cfg, dec, ecfg, max_queue, mesh=None):
+    engine = ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh)
     sched = Scheduler(engine)
     return HTTPServer(Frontend(sched, max_queue=max_queue), port=0)
 
 
-def build_paged_server(params, cfg, dec, ecfg, max_queue):
+def build_disagg_server(params, cfg, dec, ecfg, max_queue, mesh=None):
+    """Disaggregated server: dedicated prefill workers batch prompts and
+    hand KV state to the decode group through the bounded handoff queue.
+    Same slot geometry as the unified server — the trace comparison
+    isolates the admission path (batched worker prefills + attach vs one
+    inline forward per admit)."""
+    import dataclasses
+
+    ecfgd = dataclasses.replace(ecfg,
+                                prefill_slots=max(ecfg.num_slots // 2, 2),
+                                handoff_cap=2 * ecfg.num_slots)
+    engine = ContinuousBatchingEngine(params, cfg, dec, ecfgd, mesh=mesh)
+    sched = Scheduler(engine)
+    return HTTPServer(Frontend(sched, max_queue=max_queue), port=0)
+
+
+def build_paged_server(params, cfg, dec, ecfg, max_queue, mesh=None):
     """Paged-KV server whose page pool fits exactly ONE worst-case request
     (plus the trash page): concurrent admissions MUST hit
     ``PagePoolExhausted`` and requeue — the pool back-pressure path."""
@@ -233,7 +249,7 @@ def build_paged_server(params, cfg, dec, ecfg, max_queue):
     pages = 1 + cache_lib.pages_per_row(context_len, decp.block_k
                                         or cfg.bpd_k, decp.page_size)
     ecfgp = dataclasses.replace(ecfg, page_pool_pages=pages)
-    engine = ContinuousBatchingEngine(params, cfg, decp, ecfgp)
+    engine = ContinuousBatchingEngine(params, cfg, decp, ecfgp, mesh=mesh)
     sched = Scheduler(engine)
     return HTTPServer(Frontend(sched, max_queue=max_queue), port=0)
 
@@ -272,11 +288,11 @@ async def replay(srv, specs):
     }
 
 
-def reference_tokens(params, cfg, dec, ecfg, all_specs):
+def reference_tokens(params, cfg, dec, ecfg, all_specs, mesh=None):
     """In-process engine run of every unique request — the quality oracle.
     No HTTP, no priorities, no preemption: plain FCFS decode of the same
     prompts, which the served streams must match token-for-token."""
-    eng = ContinuousBatchingEngine(params, cfg, dec, ecfg)
+    eng = ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh)
     sched = Scheduler(eng)
     keyed = {}
     for s in all_specs:
@@ -304,7 +320,7 @@ def quality_gate(results, ref):
     return len(results)
 
 
-async def run(smoke: bool, seed: int) -> dict:
+async def run(smoke: bool, seed: int, mesh=None) -> dict:
     cfg = bench_model(smoke)
     slots = 2 if smoke else 4
     max_queue = 4 if smoke else 16
@@ -327,7 +343,7 @@ async def run(smoke: bool, seed: int) -> dict:
                            prompt_lens, budgets)
     paged = make_paged(rng, ecfg.max_new_cap, cfg.vocab_size, prompt_lens)
 
-    srv = build_server(params, cfg, dec, ecfg, max_queue)
+    srv = build_server(params, cfg, dec, ecfg, max_queue, mesh=mesh)
     await srv.start()
     # warm the compile caches outside the measured traces
     warm = [_spec(rng, 0.0, cfg.vocab_size, prompt_lens, 2)]
@@ -339,7 +355,7 @@ async def run(smoke: bool, seed: int) -> dict:
     finally:
         await srv.stop()
 
-    srv2 = build_paged_server(params, cfg, dec, ecfg, max_queue)
+    srv2 = build_paged_server(params, cfg, dec, ecfg, max_queue, mesh=mesh)
     await srv2.start()
     warm2 = [_spec(rng, 0.0, cfg.vocab_size, prompt_lens, 2)]
     await replay(srv2, warm2)      # paged fns compile outside the trace
@@ -348,19 +364,38 @@ async def run(smoke: bool, seed: int) -> dict:
     finally:
         await srv2.stop()
 
+    # disaggregated server, SAME Poisson arrivals as the unified trace:
+    # the TTFT comparison below gates that moving admission off the decode
+    # path never makes first tokens later than the unified engine served
+    # them (the whole point of dedicated prefill workers)
+    srv3 = build_disagg_server(params, cfg, dec, ecfg, max_queue, mesh=mesh)
+    await srv3.start()
+    warm3 = [_spec(rng, 0.0, cfg.vocab_size, prompt_lens, 2)]
+    await replay(srv3, warm3)      # prefill/attach compile outside the trace
+    try:
+        d_results, d_stats = await replay(srv3, poisson)
+    finally:
+        await srv3.stop()
+
     ref = reference_tokens(params, cfg, dec, ecfg,
-                           warm + warm2 + poisson + bursty + preempt + paged)
+                           warm + warm2 + warm3
+                           + poisson + bursty + preempt + paged, mesh=mesh)
     compared = sum(quality_gate(r, ref) for r in
-                   (p_results, b_results, pre_results, pg_results))
+                   (p_results, b_results, pre_results, pg_results,
+                    d_results))
 
     traces = {"slo_poisson": p_stats, "slo_bursty": b_stats,
-              "slo_preempt": pre_stats, "slo_paged": pg_stats}
+              "slo_preempt": pre_stats, "slo_paged": pg_stats,
+              "slo_disagg_poisson": d_stats}
     return {
         "slo_config": {"model": cfg.name, "smoke": smoke, "slots": slots,
                        "max_queue": max_queue, "budgets": list(budgets),
                        "poisson_requests": n_poisson, "poisson_rate": rate,
                        "bursty_requests": len(bursty), "seed": seed},
         **traces,
+        "slo_disagg_ttft_p99_vs_unified": (d_stats["ttft_p99_s"]
+                                           / max(p_stats["ttft_p99_s"],
+                                                 1e-9)),
         "slo_quality_compared": compared,
         "slo_quality_identical": True,       # quality_gate raised otherwise
         "slo_preemptions_total": sum(t["preemptions"]
@@ -377,11 +412,25 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI run with the gates enforced")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help="data-parallel shards (0 = no mesh)")
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--mesh-pod", type=int, default=1,
+                    help="pod-parallel shards; >1 builds the "
+                         "('pod','data','model') mesh the disaggregated "
+                         "trace places prefill workers on")
     args = ap.parse_args()
 
-    res = asyncio.run(run(args.smoke, args.seed))
+    mesh = None
+    if args.mesh_data > 0:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(args.mesh_data, args.mesh_model,
+                              pod=args.mesh_pod, require=True)
+        print(f"[slo] mesh {dict(mesh.shape)} over {mesh.size} devices")
+    res = asyncio.run(run(args.smoke, args.seed, mesh=mesh))
 
-    traces = ("slo_poisson", "slo_bursty", "slo_preempt", "slo_paged")
+    traces = ("slo_poisson", "slo_bursty", "slo_preempt", "slo_paged",
+              "slo_disagg_poisson")
     for trace in traces:
         st = res[trace]
         for key in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
@@ -408,6 +457,20 @@ def main():
         if not (st["ttft_p99_s"] > 0 and st["tpot_p99_s"] > 0):
             raise SystemExit(f"SLO GATE: {trace} has degenerate TTFT/TPOT "
                              f"percentiles: {st}")
+    # disaggregation gate: dedicated prefill workers must not make first
+    # tokens later than the unified engine served the SAME Poisson trace.
+    # "No worse" carries noise slack — p99 on a short trace is a single
+    # order statistic, so allow 1.5x relative or 100 ms absolute, whichever
+    # is larger, before calling it a regression
+    uni, dis = res["slo_poisson"], res["slo_disagg_poisson"]
+    if dis["ttft_p99_s"] > max(1.5 * uni["ttft_p99_s"],
+                               uni["ttft_p99_s"] + 0.1):
+        raise SystemExit(
+            f"SLO GATE: disaggregated TTFT p99 {dis['ttft_p99_s']:.3f}s "
+            f"regressed vs unified {uni['ttft_p99_s']:.3f}s on the same "
+            f"Poisson trace — the KV-handoff admission path is adding "
+            f"first-token latency")
+
     if args.smoke:
         st = res["slo_bursty"]
         if st["ttft_p99_s"] > 60.0 or st["tpot_p99_s"] > 5.0:

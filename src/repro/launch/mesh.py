@@ -22,21 +22,30 @@ def make_mesh(mc: MeshConfig):
     return jax.make_mesh(mc.shape, mc.axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1, *, require: bool = False):
-    """Small ("data", "model") mesh over whatever devices exist (tests /
-    local runs).  Axes shrink to fit the available device count unless
-    ``require=True`` — then an under-provisioned host raises instead of
-    silently degrading a sharded run to fewer shards (use
+def make_host_mesh(data: int = 1, model: int = 1, *, pod: int = 1,
+                   require: bool = False):
+    """Small host mesh over whatever devices exist (tests / local runs):
+    ("data", "model"), or the production ("pod", "data", "model") shape
+    when ``pod > 1`` — the host-scale twin of ``make_production_mesh``'s
+    multi-pod layout (prefill workers shard over the pod axis, the slot
+    slab over pod×data; see sharding.policy).  Axes shrink to fit the
+    available device count unless ``require=True`` — then an
+    under-provisioned host raises instead of silently degrading a sharded
+    run to fewer shards (use
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to fake N CPU
     devices)."""
     n = len(jax.devices())
-    d = min(data, n)
-    m = min(model, max(n // d, 1))
-    if require and (d, m) != (data, model):
+    p = min(pod, n)
+    d = min(data, max(n // p, 1))
+    m = min(model, max(n // (p * d), 1))
+    if require and (p, d, m) != (pod, data, model):
+        need = pod * data * model
         raise RuntimeError(
-            f"host mesh {data}x{model} needs {data * model} devices, have "
+            f"host mesh {pod}x{data}x{model} needs {need} devices, have "
             f"{n} — set XLA_FLAGS=--xla_force_host_platform_device_count="
-            f"{data * model} before jax initializes")
+            f"{need} before jax initializes")
+    if pod > 1:
+        return jax.make_mesh((p, d, m), ("pod", "data", "model"))
     return jax.make_mesh((d, m), ("data", "model"))
 
 

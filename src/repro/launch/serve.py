@@ -134,6 +134,19 @@ def main():
                     help="data-parallel shards (0 = no mesh, single device)")
     ap.add_argument("--mesh-model", type=int, default=1,
                     help="tensor-parallel shards over the model axis")
+    ap.add_argument("--mesh-pod", type=int, default=1,
+                    help="pod-parallel shards (production "
+                         "('pod','data','model') mesh shape; prefill "
+                         "workers shard over the pod axis, the slot slab "
+                         "over pod×data)")
+    ap.add_argument("--prefill-slots", type=int, default=0,
+                    help="disaggregated prefill/decode: prompts prefilled "
+                         "per prefill-worker forward, handed to decode "
+                         "groups through the bounded KV-handoff queue "
+                         "(0 = unified engine, admission prefills inline)")
+    ap.add_argument("--handoff-cap", type=int, default=0,
+                    help="bound on requests staged for / parked in the "
+                         "KV-handoff queue (0 = auto)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True).replace(dtype="float32")
@@ -166,7 +179,8 @@ def main():
     mesh = None
     if args.mesh_data > 0:
         from repro.launch.mesh import make_host_mesh
-        mesh = make_host_mesh(args.mesh_data, args.mesh_model, require=True)
+        mesh = make_host_mesh(args.mesh_data, args.mesh_model,
+                              pod=args.mesh_pod, require=True)
         print(f"[serve] mesh {dict(mesh.shape)} over {mesh.size} devices")
 
     groups = parse_policy_groups(args.policies)
@@ -323,7 +337,9 @@ def serve_http(params, cfg, dec, args, *, mesh=None, bundles=None,
 
     ecfg = EngineConfig(num_slots=args.batch,
                         max_prompt_len=args.prompt_len,
-                        max_new_cap=args.max_new)
+                        max_new_cap=args.max_new,
+                        prefill_slots=args.prefill_slots,
+                        handoff_cap=args.handoff_cap)
     engine = ContinuousBatchingEngine(params, cfg, dec, ecfg, mesh=mesh,
                                       bundles=bundles, policies=groups)
     sched = Scheduler(engine, policy=args.sched)
@@ -331,16 +347,30 @@ def serve_http(params, cfg, dec, args, *, mesh=None, bundles=None,
                      host=args.host, port=args.port)
 
     async def run():
+        import signal
+
         await srv.start()
-        print(f"[serve] http on {srv.host}:{srv.port} — POST /v1/generate, "
-              f"GET /healthz /readyz /metrics "
+        # SIGTERM → graceful drain: stop admission, finish what's in
+        # flight (SSE tails flush), close the listener, exit 0 — the same
+        # path POST /drain takes
+        loop = asyncio.get_running_loop()
+        try:
+            loop.add_signal_handler(signal.SIGTERM, srv.begin_drain)
+            loop.add_signal_handler(signal.SIGINT, srv.begin_drain)
+        except NotImplementedError:    # non-Unix event loops
+            pass
+        mode = (f"disaggregated prefill_slots={args.prefill_slots}"
+                if args.prefill_slots else "unified")
+        print(f"[serve] http on {srv.host}:{srv.port} — POST /v1/generate "
+              f"/drain, GET /healthz /readyz /metrics "
               f"(slots={args.batch}, sched={args.sched}, "
-              f"max_queue={args.max_queue})", flush=True)
+              f"max_queue={args.max_queue}, {mode})", flush=True)
         if args.http_demo:
             await _http_demo(srv)
             await srv.stop()
         else:
             await srv.serve_forever()
+            print("[serve] drained — exiting", flush=True)
 
     asyncio.run(run())
 

@@ -269,10 +269,13 @@ class KVCacheBackend:
                                      backend=self)
 
     def row_init(self, cfg: ModelConfig, context_len: int, block_k: int,
-                 dtype=None):
+                 dtype=None, *, batch: int = 1):
+        """Admission-prefill workspace: ``batch`` rows in the dense row
+        layout (batch > 1 = a prefill worker's whole packet at once; each
+        row is still scattered into a slot individually)."""
         from repro.models import model as model_lib
 
-        return model_lib.init_caches(cfg, 1, context_len, block_k, dtype,
+        return model_lib.init_caches(cfg, batch, context_len, block_k, dtype,
                                      backend=DenseBackend())
 
     def reset_rows(self, caches, mask):
@@ -380,11 +383,11 @@ class PagedBackend(KVCacheBackend):
                                      dtype, identity_tbl=not self.managed)
 
     def row_init(self, cfg: ModelConfig, context_len: int, block_k: int,
-                 dtype=None):
+                 dtype=None, *, batch: int = 1):
         from repro.models import model as model_lib
 
         return model_lib.init_caches(
-            cfg, 1, context_len, block_k, dtype,
+            cfg, batch, context_len, block_k, dtype,
             backend=_PagedRowBackend(self.page_size))
 
 

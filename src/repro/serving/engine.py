@@ -55,8 +55,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from collections import deque
+from typing import (Any, Deque, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -67,7 +70,7 @@ from repro.serving.types import (EngineConfig, FinishedRequest,
                                  PreemptedRequest, Request, SlotBatch)
 
 __all__ = ["ContinuousBatchingEngine", "PolicyGroup", "SlotBatch",
-           "PagePoolExhausted", "PreemptedRequest"]
+           "PagePoolExhausted", "PreemptedRequest", "HandoffRecord"]
 
 I32 = jnp.int32
 
@@ -94,6 +97,21 @@ class PolicyGroup:
         the one definition of "free" shared by admission and the engine's
         global free-slot view."""
         return [i for i in range(self.num_slots) if not self.status[i] & 1]
+
+
+@dataclasses.dataclass
+class HandoffRecord:
+    """One finished prefill parked in the KV-handoff queue: row ``row`` of
+    the device-side ``packet`` (a ``session.PrefillPacket``, shared by up
+    to ``prefill_slots`` records from the same worker batch) plus the host
+    metadata ``attach`` needs to install it into a freed slot."""
+
+    req: Request
+    packet: Any                 # device PrefillPacket (shared per batch)
+    row: int                    # this request's row inside the packet
+    prompt_len: int
+    max_new: int
+    prefill_time: float         # when the prefill batch was dispatched
 
 
 def _normalize_groups(policies, default_name: str,
@@ -206,10 +224,36 @@ class ContinuousBatchingEngine:
         self._by_name = {g.name: g for g in self.groups}
         self._rr = 0            # round-robin pointer over group steps
 
-        self.num_admits = 0     # prefill calls — device work accounting
-        self.num_steps = 0      # GROUP step calls (model invocations)
+        # -- disaggregated prefill/decode (prefill_slots > 0): dedicated
+        # prefill workers batch prompt prefills and park the finished KV
+        # state in a bounded handoff queue; decode groups pull rows into
+        # freed slots without ever serializing admission behind a step ----
+        self.disaggregated = ecfg.prefill_slots > 0
+        self.prefill_width = max(ecfg.prefill_slots, 1)
+        self.handoff_cap = ecfg.handoff_cap or max(2 * ecfg.num_slots,
+                                                   ecfg.prefill_slots)
+        self._staged: Dict[str, List[Tuple[Request, float]]] = {
+            g.name: [] for g in self.groups}         # awaiting a prefill
+        self._handoff: Dict[str, Deque[HandoffRecord]] = {
+            g.name: deque() for g in self.groups}    # awaiting a slot
+
+        self.num_admits = 0     # requests entering a slot (admit or attach)
+        self.num_steps = 0      # decode ITERATIONS (full-width model
+                                # forwards; a windowed step adds every
+                                # iteration its while_loop actually ran)
         self.num_host_syncs = 0  # device->host readbacks (regression guard)
         self.num_stream_syncs = 0  # poll_progress readbacks (streaming only)
+        self.num_prefill_batches = 0   # prefill-worker forwards dispatched
+        self.num_attach_backpressure = 0  # attach stalls (page pool full)
+        # per-phase host wall-clock attribution (the speedup ledger):
+        # where the serving loop actually spends its host time
+        self.time_in_prefill = 0.0          # prefill dispatch (admit incl.)
+        self.time_in_decode_dispatch = 0.0  # group-step dispatch, no sync
+        self.time_in_harvest = 0.0          # status pulls + retirement
+        # harvest of one group completed while ANOTHER stepped group's
+        # status was still unpulled (its device step still in flight) —
+        # the async per-group stream overlap, asserted in tests
+        self.num_overlap_harvests = 0
 
     @property
     def params(self):
@@ -268,20 +312,13 @@ class ContinuousBatchingEngine:
     def has_active(self) -> bool:
         return any(bool(np.any(g.status & 1)) for g in self.groups)
 
-    def admit(self, req: Request, *, now: Optional[float] = None) -> int:
-        """Admit a request into a free slot of its policy's group; returns
-        the global slot index."""
-        g = self.group_for(req.policy)
-        free = g.free_local()
-        if not free:
-            raise RuntimeError(
-                f"no free slot in policy group {g.name!r} — poll "
-                f"step()/harvest first")
+    def _padded(self, req: Request) -> Tuple[np.ndarray, int, np.ndarray, int]:
+        """Pad a request's prompt/src rows to the admission geometry (the
+        one definition shared by unified admit and the prefill workers)."""
         p = len(req.prompt)
         if not 0 < p <= self.ecfg.max_prompt_len:
             raise ValueError(
                 f"prompt length {p} outside (0, {self.ecfg.max_prompt_len}]")
-        slot = free[0]
         prompt = np.zeros((self.ecfg.max_prompt_len,), np.int32)
         prompt[:p] = req.prompt
         # source tokens for drafting policies: the request's src (padded /
@@ -291,6 +328,19 @@ class ContinuousBatchingEngine:
         n_src = min(len(src_toks), self.ecfg.max_prompt_len)
         src[:n_src] = src_toks[:n_src]
         max_new = int(np.clip(req.max_new, 1, self.ecfg.max_new_cap))
+        return prompt, p, src, max_new
+
+    def admit(self, req: Request, *, now: Optional[float] = None) -> int:
+        """Admit a request into a free slot of its policy's group; returns
+        the global slot index."""
+        g = self.group_for(req.policy)
+        free = g.free_local()
+        if not free:
+            raise RuntimeError(
+                f"no free slot in policy group {g.name!r} — poll "
+                f"step()/harvest first")
+        slot = free[0]
+        prompt, p, src, max_new = self._padded(req)
         extra = ()
         if g.pages is not None:
             # host-side page plan first: raises PagePoolExhausted (back-
@@ -299,10 +349,12 @@ class ContinuousBatchingEngine:
             tbl_row, write_mask = g.pages.plan_admit(
                 slot, req.prompt, p, max_new, self.block_k)
             extra = (jnp.asarray(tbl_row), jnp.asarray(write_mask))
+        t0 = time.monotonic()
         g.state = g.fns.admit(
             self.params, self.aux_params, g.state, jnp.asarray(slot, I32),
             jnp.asarray(prompt), jnp.asarray(p, I32),
             jnp.asarray(max_new, I32), jnp.asarray(src), *extra)
+        self.time_in_prefill += time.monotonic() - t0
         g.status[slot] = 1          # known host-side: no readback needed
         self.num_admits += 1
         admit_time = time.monotonic() if now is None else now
@@ -314,16 +366,177 @@ class ContinuousBatchingEngine:
         }
         return g.offset + slot
 
+    # -- disaggregated prefill/decode ----------------------------------------
+
+    def handoff_backlog(self) -> int:
+        """Requests staged for prefill plus rows parked in the KV-handoff
+        queue — work admitted to the engine that holds no slot yet."""
+        return (sum(len(v) for v in self._staged.values())
+                + sum(len(v) for v in self._handoff.values()))
+
+    def handoff_free(self) -> int:
+        """Remaining capacity of the bounded handoff pipeline (staged +
+        parked share one bound so prefill output can never pile up
+        unboundedly when decode stalls)."""
+        return self.handoff_cap - self.handoff_backlog()
+
+    def queue_prefill(self, req: Request, *, now: Optional[float] = None) -> None:
+        """Stage a request for the prefill workers (disaggregated mode
+        only).  Validates geometry now so malformed requests fail at
+        submission, not inside a worker batch; raises RuntimeError when the
+        handoff pipeline is full (back-pressure — callers check
+        ``handoff_free()`` first, exactly like ``free_slots`` for admit)."""
+        if not self.disaggregated:
+            raise RuntimeError(
+                "queue_prefill requires a disaggregated engine "
+                "(EngineConfig.prefill_slots > 0); unified engines admit "
+                "directly")
+        g = self.group_for(req.policy)
+        self._padded(req)           # geometry validation only
+        if self.handoff_free() <= 0:
+            raise RuntimeError(
+                f"KV-handoff queue full ({self.handoff_cap} staged+parked) "
+                f"— poll attach_ready()/step() first")
+        t = time.monotonic() if now is None else now
+        if req.arrival is None:
+            req.arrival = t
+        self._staged[g.name].append((req, t))
+
+    def run_prefills(self, *, now: Optional[float] = None) -> int:
+        """Dispatch prefill-worker batches for everything staged: each
+        batch prefills up to ``prefill_slots`` prompts in ONE forward
+        (short batches are padded with inert dummy rows — same static
+        shape, so the worker compiles once) and parks its rows in the
+        handoff queue as ``HandoffRecord``s sharing the device packet.
+        Dispatch-only — no device→host sync.  Returns rows parked."""
+        t0 = time.monotonic()
+        parked = 0
+        w = self.prefill_width
+        for g in self.groups:
+            staged = self._staged[g.name]
+            while staged:
+                if (len(staged) < w
+                        and (self._handoff[g.name]
+                             or not g.free_local())):
+                    # coalesce: parked rows already cover the free slots
+                    # (or none are free), so a partial batch buys no TTFT
+                    # — hold the stage until a full-width batch forms.
+                    # The moment a slot opens with nothing parked, the
+                    # next call dispatches whatever is staged: deferring
+                    # past that point idles decode slots, which costs
+                    # more than the padded partial forward saves
+                    break
+                batch, self._staged[g.name] = staged[:w], staged[w:]
+                staged = self._staged[g.name]
+                prompts = np.zeros((w, self.ecfg.max_prompt_len), np.int32)
+                plens = np.ones((w,), np.int32)   # dummy rows: 1-token prompt
+                srcs = np.zeros((w, self.ecfg.max_prompt_len), np.int32)
+                rows = []
+                for r, (req, _) in enumerate(batch):
+                    prompt, p, src, max_new = self._padded(req)
+                    prompts[r], plens[r], srcs[r] = prompt, p, src
+                    rows.append((req, r, p, max_new))
+                packet = g.fns.prefill(self.params, self.aux_params,
+                                       jnp.asarray(prompts),
+                                       jnp.asarray(plens), jnp.asarray(srcs))
+                self.num_prefill_batches += 1
+                t = time.monotonic() if now is None else now
+                for req, r, p, max_new in rows:
+                    self._handoff[g.name].append(HandoffRecord(
+                        req=req, packet=packet, row=r, prompt_len=p,
+                        max_new=max_new, prefill_time=t))
+                    parked += 1
+        self.time_in_prefill += time.monotonic() - t0
+        return parked
+
+    def attach_ready(self, *, now: Optional[float] = None) -> int:
+        """Install parked handoff rows into freed decode slots (the
+        prefill→decode KV handoff — under a pod mesh this is the
+        sharding-constrained device-to-device transfer).  FIFO per group;
+        a page-pool-exhausted head waits in place (head-of-line, so
+        admission order within a group is preserved).
+
+        Consecutive records sharing one prefill packet install in ONE
+        ``attach_many`` dispatch (a per-record attach call would hand
+        back the dispatch overhead that batching the prefill amortized).
+        Returns the number of requests attached."""
+        attached = 0
+        w = self.prefill_width
+        for g in self.groups:
+            q = self._handoff[g.name]
+            while q:
+                free = g.free_local()
+                if not free:
+                    break
+                # gather up to W head records from the SAME packet that
+                # have both a free slot and (if paged) a page plan
+                pkt = q[0].packet
+                batch, blocked = [], False
+                while (q and q[0].packet is pkt and len(batch) < len(free)
+                       and len(batch) < w):
+                    rec, slot = q[0], free[len(batch)]
+                    extra = None
+                    if g.pages is not None:
+                        try:
+                            extra = g.pages.plan_admit(
+                                slot, rec.req.prompt, rec.prompt_len,
+                                rec.max_new, self.block_k)
+                        except PagePoolExhausted:
+                            # head-of-line: the failed record waits for a
+                            # release; whatever fit still attaches below
+                            self.num_attach_backpressure += 1
+                            blocked = True
+                            break
+                    q.popleft()
+                    batch.append((rec, slot, extra))
+                if not batch:
+                    break
+                rows = np.zeros((w,), np.int32)
+                slots = np.zeros((w,), np.int32)
+                maxn = np.zeros((w,), np.int32)
+                valid = np.zeros((w,), bool)
+                for i, (rec, slot, _) in enumerate(batch):
+                    rows[i], slots[i] = rec.row, slot
+                    maxn[i], valid[i] = rec.max_new, True
+                pextra = ()
+                if g.pages is not None:
+                    P_ = g.fns.paged.pages_per_row
+                    tbls = np.zeros((w, P_), np.int32)
+                    masks = np.zeros((w, P_), bool)
+                    for i, (_, _, (tbl_row, write_mask)) in enumerate(batch):
+                        tbls[i], masks[i] = tbl_row, write_mask
+                    pextra = (jnp.asarray(tbls), jnp.asarray(masks))
+                g.state = g.fns.attach_many(
+                    g.state, pkt, jnp.asarray(rows), jnp.asarray(slots),
+                    jnp.asarray(maxn), jnp.asarray(valid), *pextra)
+                t = time.monotonic() if now is None else now
+                for rec, slot, _ in batch:
+                    g.status[slot] = 1  # known host-side: no readback needed
+                    self.num_admits += 1
+                    g.slot_meta[slot] = {
+                        "req": rec.req, "prompt_len": rec.prompt_len,
+                        "max_new": rec.max_new, "admit_time": t, "emitted": 0,
+                    }
+                attached += len(batch)
+                if blocked:
+                    break
+        return attached
+
     def step(self, *, now: Optional[float] = None) -> List[FinishedRequest]:
         """One BPD iteration over every active slot group, then
         harvest+evict.
 
-        Groups step round-robin (the starting group rotates so no policy
-        is systematically served first), and ALL group steps are
-        dispatched before any status is read back — device work across
-        groups overlaps, and each group step costs exactly one fused
-        device→host sync.
+        Async per-group streams: groups step round-robin (the starting
+        group rotates so no policy is systematically served first), ALL
+        group steps are dispatched before any status is read back, and
+        each stepped group is then pulled AND harvested in dispatch order
+        — so the host-side harvest of group A (status pull, token copies,
+        retirement, evict dispatch) overlaps group B's still-in-flight
+        device step (counted in ``num_overlap_harvests``).  Each group
+        step still costs exactly one fused device→host sync, now off the
+        critical path of the other groups' device work.
         """
+        t0 = time.monotonic()
         n = len(self.groups)
         order = [self.groups[(self._rr + i) % n] for i in range(n)]
         self._rr = (self._rr + 1) % n
@@ -331,56 +544,80 @@ class ContinuousBatchingEngine:
         for g in order:
             if not np.any(g.status & 1):
                 continue                     # idle group: no device work
-            g.state, status = g.fns.step(self.params, self.aux_params,
-                                         g.state)
-            self.num_steps += 1
-            stepped.append((g, status))
+            g.state, status, iters = g.fns.step(self.params,
+                                                self.aux_params, g.state)
+            stepped.append((g, status, iters))
+        self.time_in_decode_dispatch += time.monotonic() - t0
         # the ONE per-group-step device->host round-trip: a fused (S,) int8
         # array carrying both the active and the finished bits (the harvest
-        # decision) — pulled only after every group's step is in flight
-        for g, status in stepped:
-            g.status = np.array(status)      # writable host copy
+        # decision) — pulled only after every group's step is in flight,
+        # and each group's harvest runs before the NEXT group's pull
+        out: List[FinishedRequest] = []
+        t1 = time.monotonic()
+        for idx, (g, status, iters) in enumerate(stepped):
+            # one fused pull: the (S,) status plus the window's iteration
+            # count (a windowed step is 1..steps_per_sync forwards — the
+            # invocation accounting must count every one of them)
+            status_h, it = jax.device_get((status, iters))
+            g.status = np.array(status_h)    # writable host copy
+            self.num_steps += int(it)
             self.num_host_syncs += 1
-        return self.harvest(now=now)
+            out += self._harvest_group(g, now=now)
+            if idx < len(stepped) - 1:
+                # host work above ran while the later stepped groups'
+                # statuses were still unpulled (their device steps free to
+                # proceed) — the measurable async-stream overlap
+                self.num_overlap_harvests += 1
+        self.time_in_harvest += time.monotonic() - t1
+        return out
 
     def harvest(self, *, now: Optional[float] = None) -> List[FinishedRequest]:
-        """Retire finished slots: copy outputs out, free the slots.
+        """Retire finished slots of every group: copy outputs out, free
+        the slots (host-cached status decides — a no-finish group costs
+        zero additional device syncs)."""
+        out: List[FinishedRequest] = []
+        for g in self.groups:
+            out += self._harvest_group(g, now=now)
+        return out
+
+    def _harvest_group(self, g: PolicyGroup, *,
+                       now: Optional[float] = None) -> List[FinishedRequest]:
+        """Retire the finished slots of ONE group.
 
         Decides from the host-cached status — the common no-finish group
         step costs zero additional device syncs; the big per-slot arrays
-        are only pulled for groups where something actually finished.
+        are only pulled when something actually finished (one pull per
+        finishing group, counted in ``num_host_syncs``).
         """
+        done_mask = (g.status & 2).astype(bool)
+        if not done_mask.any():
+            return []
+        t = time.monotonic() if now is None else now
         out: List[FinishedRequest] = []
-        t = None
-        for g in self.groups:
-            done_mask = (g.status & 2).astype(bool)
-            if not done_mask.any():
-                continue
-            if t is None:
-                t = time.monotonic() if now is None else now
-            tokens = np.asarray(g.state.tokens)
-            text_len = np.asarray(g.state.text_len)
-            generated = np.asarray(g.state.generated)
-            invocations = np.asarray(g.state.invocations)
-            self.num_host_syncs += 1  # one harvest pull per finishing group
-            for i in np.nonzero(done_mask)[0]:
-                meta = g.slot_meta[i]
-                req: Request = meta["req"]
-                p = meta["prompt_len"]
-                iters = max(int(invocations[i]) - 1, 1)  # minus the prefill
-                out.append(FinishedRequest(
-                    rid=req.rid, prompt_len=p,
-                    tokens=tokens[i, p:int(text_len[i])].copy(),
-                    generated=int(generated[i]),
-                    invocations=int(invocations[i]),
-                    mean_accepted=float(generated[i]) / iters,
-                    arrival=req.arrival, admit_time=meta["admit_time"],
-                    finish_time=t, policy=g.name))
-                g.slot_meta[i] = None
-                if g.pages is not None:
-                    g.pages.release(int(i))
-            g.state = g.fns.evict(g.state, jnp.asarray(done_mask))
-            g.status[done_mask] = 0     # known host-side: freed, inactive
+        # one FUSED transfer for all four arrays — a single host round-trip
+        # instead of four sequential blocking pulls
+        tokens, text_len, generated, invocations = jax.device_get(
+            (g.state.tokens, g.state.text_len,
+             g.state.generated, g.state.invocations))
+        self.num_host_syncs += 1  # one harvest pull per finishing group
+        for i in np.nonzero(done_mask)[0]:
+            meta = g.slot_meta[i]
+            req: Request = meta["req"]
+            p = meta["prompt_len"]
+            iters = max(int(invocations[i]) - 1, 1)  # minus the prefill
+            out.append(FinishedRequest(
+                rid=req.rid, prompt_len=p,
+                tokens=tokens[i, p:int(text_len[i])].copy(),
+                generated=int(generated[i]),
+                invocations=int(invocations[i]),
+                mean_accepted=float(generated[i]) / iters,
+                arrival=req.arrival, admit_time=meta["admit_time"],
+                finish_time=t, policy=g.name))
+            g.slot_meta[i] = None
+            if g.pages is not None:
+                g.pages.release(int(i))
+        g.state = g.fns.evict(g.state, jnp.asarray(done_mask))
+        g.status[done_mask] = 0     # known host-side: freed, inactive
         return out
 
     # -- streaming + preemption (serving front end) --------------------------
@@ -403,8 +640,8 @@ class ContinuousBatchingEngine:
                     if (g.status[i] & 1) and g.slot_meta[i] is not None]
             if not live:
                 continue
-            tokens = np.asarray(g.state.tokens)
-            text_len = np.asarray(g.state.text_len)
+            tokens, text_len = jax.device_get(
+                (g.state.tokens, g.state.text_len))
             self.num_stream_syncs += 1
             for i in live:
                 meta = g.slot_meta[i]
@@ -481,7 +718,16 @@ class ContinuousBatchingEngine:
             if id(g.fns) in seen:
                 continue
             seen.add(id(g.fns))
-            for part in ("admit", "step", "evict"):
+            for part in ("admit", "prefill", "attach", "attach_many",
+                         "step", "evict"):
+                n = getattr(g.fns, part)._cache_size()
+                if n == 0:
+                    # never traced — unified engines don't call the
+                    # prefill/attach pair, disaggregated ones only reach
+                    # admit through preemption; an uncalled fn can't have
+                    # recompiled, so a 0 would only trip the strict ==1
+                    # gates for paths a run legitimately never took
+                    continue
                 key = part if single else f"{g.name}/{part}"
-                out[key] = getattr(g.fns, part)._cache_size()
+                out[key] = n
         return out

@@ -43,7 +43,7 @@ import numpy as np
 from repro.serving.scheduler import Scheduler
 from repro.serving.types import Request
 
-__all__ = ["Backpressure", "StreamEvent", "Frontend"]
+__all__ = ["Backpressure", "Draining", "StreamEvent", "Frontend"]
 
 
 class Backpressure(RuntimeError):
@@ -54,6 +54,12 @@ class Backpressure(RuntimeError):
     def __init__(self, msg: str, retry_after_s: float):
         super().__init__(msg)
         self.retry_after_s = retry_after_s
+
+
+class Draining(RuntimeError):
+    """Admission refused: the server is draining toward shutdown — no new
+    requests, but everything already in flight runs to completion (the
+    HTTP layer maps this to 503 so load balancers fail over)."""
 
 
 @dataclasses.dataclass
@@ -87,6 +93,7 @@ class Frontend:
         self._task: Optional[asyncio.Task] = None
         self._running = False
         self._ready = False
+        self._draining = False
         # service counters (on top of scheduler/engine ones) for /metrics
         self.requests_total = 0
         self.rejected_total = 0
@@ -114,9 +121,31 @@ class Frontend:
             self._task = None
         self._ready = False
 
+    async def drain(self) -> None:
+        """Graceful drain: stop admission immediately (``submit`` raises
+        ``Draining``; readiness goes false so load balancers route away),
+        let every in-flight request — queued, parked in the KV handoff,
+        or mid-decode — run to completion with its SSE tail flushed
+        through the normal stream path, then stop the serve loop.
+
+        Idempotent and safe to call concurrently with traffic: the serve
+        loop itself detects quiescence (between ticks, so it never races
+        the engine) and exits; this coroutine just awaits it.
+        """
+        self._draining = True
+        self._ready = False
+        if self._task is not None:
+            await self._task
+            self._task = None
+        self._running = False
+
     @property
     def ready(self) -> bool:
         return self._ready
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
 
     # -- admission -----------------------------------------------------------
 
@@ -149,6 +178,9 @@ class Frontend:
         ``deadline_s`` is relative (seconds from now); it becomes the
         absolute monotonic deadline the scheduler preempts for.
         """
+        if self._draining:
+            self.rejected_total += 1
+            raise Draining("server is draining: no new admissions")
         if self.queue_depth() >= self.max_queue:
             self.rejected_total += 1
             raise Backpressure(
@@ -220,6 +252,14 @@ class Frontend:
                         self.finished_total += 1
                         del self._streams[rid]
             if not events:
+                if self._draining and not self._streams:
+                    with self._lock:
+                        idle = not self._pending
+                    # quiescence read between ticks (executor calls are
+                    # strictly sequential, so this never races the engine)
+                    if idle and await loop.run_in_executor(
+                            None, self.scheduler.drained):
+                        return      # drain complete: the loop retires itself
                 await asyncio.sleep(self.idle_sleep_s)
 
     # -- observability -------------------------------------------------------
@@ -242,4 +282,14 @@ class Frontend:
             "host_syncs_total": eng.num_host_syncs,
             "stream_syncs_total": eng.num_stream_syncs,
             "tpot_estimate_seconds": sch.tpot_est,
+            "draining": int(self._draining),
+            # disaggregated prefill/decode + async-stream attribution
+            "disaggregated": int(eng.disaggregated),
+            "prefill_batches_total": eng.num_prefill_batches,
+            "handoff_backlog": eng.handoff_backlog(),
+            "attach_backpressure_total": eng.num_attach_backpressure,
+            "overlap_harvests_total": eng.num_overlap_harvests,
+            "time_in_prefill_seconds": eng.time_in_prefill,
+            "time_in_decode_dispatch_seconds": eng.time_in_decode_dispatch,
+            "time_in_harvest_seconds": eng.time_in_harvest,
         }

@@ -248,23 +248,44 @@ class Scheduler:
         where a deadline demands it), then one engine step (= one BPD
         iteration per active group)."""
         t = time.monotonic() if now is None else now
-        for name in self.engine.policy_names():
-            for _ in range(len(self.engine.free_slots(name))):
-                req = self._pop_next(t, group=name)
+        # preemption runs BEFORE admission/staging: a deadline-at-risk
+        # request must claim its slot while it is still in the queue — the
+        # disaggregated staging loop below would otherwise move it into
+        # the handoff queue, where it waits behind the very decode it was
+        # entitled to evict (groups with free slots are skipped, so this
+        # never steals an admission a natural free slot would satisfy)
+        self._maybe_preempt(t)
+        if self.engine.disaggregated:
+            # disaggregated admission: stage arrivals for the prefill
+            # workers while handoff capacity lasts — admission never waits
+            # for (or serializes behind) a decode slot — then dispatch the
+            # worker batches and install parked rows into freed slots.
+            # Page-pool back-pressure is handled at attach inside the
+            # engine (head-of-line wait in the handoff queue).
+            while self.engine.handoff_free() > 0:
+                req = self._pop_next(t)
                 if req is None:
                     break
-                try:
-                    self.engine.admit(req, now=now)
-                except PagePoolExhausted:
-                    # back-pressure: the paged KV pool can oversubscribe the
-                    # slot slab — requeue with head-of-line ownership and
-                    # stop admitting to this group until decode steps
-                    # retire requests and free pages
-                    req.backpressured += 1
-                    self.backpressure_events += 1
-                    self.queue.append(req)
-                    break
-        self._maybe_preempt(t)
+                self.engine.queue_prefill(req, now=now)
+            self.engine.run_prefills(now=now)
+            self.engine.attach_ready(now=now)
+        else:
+            for name in self.engine.policy_names():
+                for _ in range(len(self.engine.free_slots(name))):
+                    req = self._pop_next(t, group=name)
+                    if req is None:
+                        break
+                    try:
+                        self.engine.admit(req, now=now)
+                    except PagePoolExhausted:
+                        # back-pressure: the paged KV pool can oversubscribe
+                        # the slot slab — requeue with head-of-line ownership
+                        # and stop admitting to this group until decode steps
+                        # retire requests and free pages
+                        req.backpressured += 1
+                        self.backpressure_events += 1
+                        self.queue.append(req)
+                        break
         if not self.engine.has_active():
             return []
         done = [self._stitch(f) for f in self.engine.step(now=now)]
@@ -277,7 +298,8 @@ class Scheduler:
         return done
 
     def drained(self) -> bool:
-        return not self.queue and not self.engine.has_active()
+        return (not self.queue and not self.engine.has_active()
+                and self.engine.handoff_backlog() == 0)
 
     def run(self, max_steps: int = 100_000) -> List[FinishedRequest]:
         """Drive until every submitted request has been served."""
@@ -287,8 +309,10 @@ class Scheduler:
                 raise RuntimeError(f"scheduler did not drain in {max_steps} "
                                    f"steps ({len(self.queue)} queued)")
             now = time.monotonic()
-            if not self.engine.has_active() and not self.pending(now):
-                # idle: sleep until the next arrival
+            if (not self.engine.has_active() and not self.pending(now)
+                    and self.engine.handoff_backlog() == 0):
+                # idle: sleep until the next arrival (drained() was false
+                # with nothing in flight, so the queue is non-empty)
                 nxt = min(r.arrival for r in self.queue)
                 time.sleep(max(nxt - now, 0.0))
                 continue

@@ -25,6 +25,12 @@ parsing for the five routes the service needs:
                       this so cold replicas don't take traffic).
   GET  /metrics       Prometheus-style ``name value`` lines from
                       ``Frontend.metrics()``.
+  POST /drain         graceful shutdown: 202 immediately, admission stops
+                      (new submits get 503, /readyz flips to 503
+                      "draining"), in-flight requests finish and flush
+                      their SSE tails, then the listener closes and
+                      ``serve_forever()`` returns.  SIGTERM takes the
+                      same path (wired in launch/serve.py).
 
 Back-pressure: a saturated wait queue (or the page pool behind it —
 ``PagePoolExhausted`` requeues keep the queue full) rejects with **429**
@@ -41,7 +47,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.serving.frontend import Backpressure, Frontend
+from repro.serving.frontend import Backpressure, Draining, Frontend
 
 __all__ = ["HTTPServer", "sse_event"]
 
@@ -105,6 +111,7 @@ class HTTPServer:
         self.host = host
         self.port = port            # rebound to the real port on start()
         self._server: Optional[asyncio.base_events.Server] = None
+        self._drain_task: Optional[asyncio.Task] = None
 
     async def start(self) -> None:
         await self.frontend.start()
@@ -121,8 +128,32 @@ class HTTPServer:
 
     async def serve_forever(self) -> None:
         assert self._server is not None, "start() first"
-        async with self._server:
-            await self._server.serve_forever()
+        try:
+            async with self._server:
+                await self._server.serve_forever()
+        except asyncio.CancelledError:
+            # a completed drain closes the listener, which cancels
+            # serve_forever — that is the graceful-exit path, not an error
+            if self._drain_task is None or not self._drain_task.done():
+                raise
+
+    # -- graceful drain ------------------------------------------------------
+
+    def begin_drain(self) -> asyncio.Task:
+        """Start a graceful drain exactly once (idempotent): admission
+        stops immediately (new submits get 503), every in-flight request
+        — queued, parked in the KV handoff, or mid-decode — finishes and
+        flushes its SSE tail, then the listener closes so
+        ``serve_forever()`` returns.  Wired to SIGTERM and ``POST /drain``
+        by ``launch/serve.py``."""
+        if self._drain_task is None:
+            self._drain_task = asyncio.ensure_future(self._drain_and_close())
+        return self._drain_task
+
+    async def _drain_and_close(self) -> None:
+        await self.frontend.drain()
+        if self._server is not None:
+            self._server.close()
 
     # -- request handling ----------------------------------------------------
 
@@ -154,12 +185,20 @@ class HTTPServer:
             if self.frontend.ready:
                 writer.write(_response(200, "OK", b"ready\n", "text/plain"))
             else:
+                msg = (b"draining\n" if self.frontend.draining
+                       else b"warming up\n")
                 writer.write(_response(503, "Service Unavailable",
-                                       b"warming up\n", "text/plain"))
+                                       msg, "text/plain"))
         elif method == "GET" and path == "/metrics":
             lines = "".join(f"repro_serving_{k} {v}\n"
                             for k, v in self.frontend.metrics().items())
             writer.write(_response(200, "OK", lines.encode(), "text/plain"))
+        elif method == "POST" and path == "/drain":
+            self.begin_drain()
+            writer.write(_json_response(202, "Accepted", {
+                "draining": True,
+                "in_flight": int(self.frontend.metrics()["active_slots"]),
+                "queued": self.frontend.queue_depth()}))
         elif method == "POST" and path == "/v1/generate":
             await self._generate(body, writer)
         else:
@@ -185,6 +224,10 @@ class HTTPServer:
                 priority=int(spec.get("priority", 0)),
                 deadline_s=spec.get("deadline_s"),
                 src=spec.get("src"))
+        except Draining as e:
+            writer.write(_json_response(503, "Service Unavailable",
+                                        {"error": str(e)}))
+            return
         except Backpressure as e:
             retry = max(1, int(np.ceil(e.retry_after_s)))
             writer.write(_json_response(

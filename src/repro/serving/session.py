@@ -74,6 +74,29 @@ def _geometry(batch: Dict) -> tuple:
                         for k, v in batch.items()))
 
 
+class PrefillPacket(NamedTuple):
+    """Finished prefill state for a batch of prompts, before any slot is
+    chosen — the unit of work a prefill worker hands to a decode group
+    through the engine's KV-handoff queue.
+
+    Every leaf leads with the prefill width ``W``; row ``i`` is one
+    request's complete admission state (token buffer, first-block
+    proposals, prefilled KV caches, fresh per-row policy state).  A packet
+    is slot-independent by construction: ``attach`` scatters one row into
+    any free slot later, so prefill never serializes behind a decode step.
+    Under a pod mesh the packet shards its rows over the ``pod`` axis
+    (``sharding.policy.packet_specs``) — the attach-time resharding into
+    the ("pod", "data")-sharded slot slab IS the prefill→decode KV
+    handoff transfer.
+    """
+
+    tokens: Any        # (W, buf_len) slot token buffer rows (padded prompt)
+    prompt_len: Any    # (W,) real prompt lengths
+    proposals: Any     # (W, k) first-block draft proposals
+    caches: Any        # prefilled KV caches, batch dim = W (row workspace)
+    policy_state: Any  # fresh per-row DecodePolicy state (W-leading leaves)
+
+
 class ServingFns(NamedTuple):
     """The engine's device functions, compiled once per (policy, geometry).
 
@@ -84,6 +107,11 @@ class ServingFns(NamedTuple):
     shares one compiled function); ``admit`` additionally takes the
     request's source tokens (padded like the prompt) for source-drafting
     policies.
+
+    ``admit`` IS ``attach ∘ prefill`` at width 1: the unified engine's
+    admission and the disaggregated engine's prefill-worker path trace the
+    same prefill body and the same scatter, so the two modes are
+    token-identical by construction rather than by test alone.
     """
 
     init: Callable      # (gid) -> SlotBatch (mesh-placed when sharded)
@@ -92,6 +120,16 @@ class ServingFns(NamedTuple):
                         # trailing page-mapping args exist iff paged
     step: Callable      # (params, aux, state) -> (state, status (S,) int8)
     evict: Callable     # (state, mask) -> state
+    prefill: Callable   # (params, aux, prompts (W,P), plens (W,),
+                        #  srcs (W,P)) -> PrefillPacket — the slot-free
+                        # half of admission, batched to the prefill width
+    attach: Callable    # (state, packet, row, slot, max_new
+                        #  [, tbl_row, write_mask]) -> state — the
+                        # scatter-only half (the KV handoff)
+    attach_many: Callable = None  # (state, packet, rows (W,), slots (W,),
+                        #  max_news (W,), valid (W,)[, tbl_rows (W,P),
+                        #  write_masks (W,P)]) -> state — up to W handoffs
+                        # in ONE dispatch (invalid lanes write nothing)
     paged: Optional["PagedGeometry"] = None  # page-pool geometry (None=dense)
 
 
@@ -182,6 +220,7 @@ class DecodeSession:
                 return fn(*args)
 
         call._cache_size = getattr(fn, "_cache_size", None)
+        call._jitted = fn      # AOT access (launch/dryrun lowers these)
         return call
 
     def _constrain(self) -> Optional[Callable]:
@@ -413,59 +452,92 @@ class DecodeSession:
                                                  policy=pol))
             cache_sh = slot_sh.caches
 
-        def admit(params, aux, state: SlotBatch, slot, prompt, prompt_len,
-                  max_new, src, tbl_row=None, write_mask=None) -> SlotBatch:
-            """Prefill one padded prompt into row ``slot``.
+        def prefill(params, aux, prompts, plens, srcs) -> PrefillPacket:
+            """The slot-free half of admission: prefill ``W`` padded
+            prompts in ONE forward and return their handoff packet.
 
-            The single-row prefill is replicated work (batch 1 never splits
-            the data axis); the writes into the slot batch are a global
-            scatter constrained back to the slot shardings, so only the
-            data shard owning ``slot`` mutates its rows.
+            Per-row computation is identical to the historical batch-1
+            admission prefill (rows never mix — embeddings, attention and
+            the per-row policy init are all row-local), so a packet row
+            attached later is bit-for-bit the state ``admit`` would have
+            scattered directly.  Batching amortizes the per-dispatch host
+            overhead across ``W`` prompts — the disaggregated engine's
+            main throughput lever — and gives prefill its own wide-
+            sequence compute shape, distinct from the decode step's
+            memory-bound block-verify geometry.
 
-            Under the paged backend the prefill still runs on a dense
-            batch-1 workspace (page-aligned buffers, see
-            ``PagedBackend.row_init``); ``tbl_row`` ((P,) int32) and
-            ``write_mask`` ((P,) bool) are the host allocator's physical
-            mapping for this slot — copy-on-write prefix hits arrive with
-            ``write_mask=False`` and are left untouched in the pool.
+            Per-slot policy state is built fresh here — a packet row never
+            inherits a previous occupant's drafter/schedule state — and
+            the policy's drafter proposes the first block (a model-backed
+            drafter prefills its own cache on the padded prompts, with its
+            params from ``aux``; a source-drafting policy stores the
+            request's src rows).
             """
-            row_caches = kv_backend.row_init(cfg, context_len, block_k)
-            h = model_lib.embed_inputs(params, cfg, {"tokens": prompt[None]})
+            w = prompts.shape[0]
+            row_caches = kv_backend.row_init(cfg, context_len, block_k,
+                                             batch=w)
+            h = model_lib.embed_inputs(params, cfg, {"tokens": prompts})
             positions = jnp.arange(h.shape[1], dtype=I32)
             hidden, _, row_caches = model_lib.forward_hidden(
                 params, cfg, h, positions=positions, caches=row_caches,
                 moe_full_capacity=True)
-            last = jax.lax.dynamic_index_in_dim(
-                hidden[0], prefix + prompt_len - 1, axis=0, keepdims=False)
-            logits = model_lib.all_head_logits(params, cfg, last)  # (K, V)
+            idx = (prefix + plens - 1)[:, None, None]
+            last = jnp.take_along_axis(
+                hidden, jnp.broadcast_to(idx, (w, 1, hidden.shape[2])),
+                axis=1)[:, 0]
+            logits = model_lib.all_head_logits(params, cfg, last)  # (W, K, V)
 
-            # per-slot policy state resets on admission — a fresh request
-            # must not inherit the previous occupant's drafter/schedule
-            # state — and the policy's drafter proposes the first block
-            # (a model-backed drafter prefills its own cache on the padded
-            # prompt here, with its params from ``aux``; a source-drafting
-            # policy stores the request's src row)
             row_ps = pol.init_state(cfg, dec,
-                                    {"tokens": prompt[None],
-                                     "src": src[None]}, 1, aux=aux)
-            last_tok = jnp.take(prompt, jnp.maximum(prompt_len - 1, 0))
-            row_props, row_ds = decode_lib.initial_draft(
-                pol, logits[None], prompt_len, block_k, row_ps.drafter,
-                prev_token=last_tok[None], aux_params=aux)
-            proposals = row_props[0]
+                                    {"tokens": prompts, "src": srcs}, w,
+                                    aux=aux)
+            last_tok = jnp.take_along_axis(
+                prompts, jnp.maximum(plens - 1, 0)[:, None], axis=1)[:, 0]
+            proposals, row_ds = decode_lib.initial_draft(
+                pol, logits, plens, block_k, row_ps.drafter,
+                prev_token=last_tok, aux_params=aux)
             row_ps = row_ps._replace(drafter=row_ds)
 
-            row_tokens = jnp.zeros((buf_len,), I32)
-            row_tokens = row_tokens.at[:ecfg.max_prompt_len].set(prompt)
+            tokens = jnp.zeros((w, buf_len), I32)
+            tokens = tokens.at[:, :ecfg.max_prompt_len].set(prompts)
+            return PrefillPacket(tokens=tokens,
+                                 prompt_len=jnp.asarray(plens, I32),
+                                 proposals=proposals, caches=row_caches,
+                                 policy_state=row_ps)
+
+        def attach(state: SlotBatch, packet: PrefillPacket, row, slot,
+                   max_new, tbl_row=None, write_mask=None) -> SlotBatch:
+            """The scatter-only half of admission: install packet ``row``
+            into slot ``slot`` — the prefill→decode KV handoff.
+
+            The packet row is replicated work (its slice never splits the
+            data axis); the writes into the slot batch are a global scatter
+            constrained back to the slot shardings, so only the data shard
+            owning ``slot`` mutates its rows.  Under a pod mesh the packet
+            rows live on the ``pod`` axis and the scatter reshards them
+            into the ("pod", "data")-split slot slab — the measured
+            device-to-device handoff transfer (launch/dryrun.py).
+
+            Under the paged backend the packet rows are dense page-aligned
+            workspaces (``PagedBackend.row_init``); ``tbl_row`` ((P,)
+            int32) and ``write_mask`` ((P,) bool) are the host allocator's
+            physical mapping for this slot — copy-on-write prefix hits
+            arrive with ``write_mask=False`` and are left untouched in the
+            pool.
+            """
+            take = lambda x: jax.lax.dynamic_slice_in_dim(  # noqa: E731
+                x, row, 1, axis=0)
+            row_caches = jax.tree_util.tree_map(take, packet.caches)
+            row_ps = jax.tree_util.tree_map(take, packet.policy_state)
+            prompt_len = take(packet.prompt_len)[0]
             upd = lambda arr, val: arr.at[slot].set(val)  # noqa: E731
             policy_state = jax.tree_util.tree_map(
-                lambda full, row: full.at[slot].set(row[0]),
+                lambda full, r: full.at[slot].set(r[0]),
                 state.policy_state, row_ps)
             return state._replace(
-                tokens=upd(state.tokens, row_tokens),
+                tokens=upd(state.tokens, take(packet.tokens)[0]),
                 text_len=upd(state.text_len, prompt_len),
                 prompt_len=upd(state.prompt_len, prompt_len),
-                proposals=upd(state.proposals, proposals),
+                proposals=upd(state.proposals, take(packet.proposals)[0]),
                 caches=model_lib.scatter_cache_row(state.caches, row_caches,
                                                    slot, constraint=cache_sh,
                                                    tbl_row=tbl_row,
@@ -477,6 +549,42 @@ class DecodeSession:
                 invocations=upd(state.invocations, 1),  # the prefill call
                 policy_state=policy_state,
             )
+
+        def attach_many(state: SlotBatch, packet: PrefillPacket, rows, slots,
+                        max_news, valid, tbl_rows=None,
+                        write_masks=None) -> SlotBatch:
+            """Batched KV handoff: install up to W packet rows into W freed
+            slots in ONE dispatch.  A per-request attach call would hand
+            back the admission dispatch overhead that batching the prefill
+            just amortized — this keeps the whole admission path at O(1)
+            dispatches per worker batch.  ``valid`` masks the short final
+            batch: invalid lanes are skipped entirely (``lax.cond``), so
+            padding writes nothing and the call compiles once at width W.
+            """
+            w_ = rows.shape[0]
+            for i in range(w_):
+                extra = (() if tbl_rows is None
+                         else (tbl_rows[i], write_masks[i]))
+
+                def _install(st, i=i, extra=extra):
+                    return attach(st, packet, rows[i], slots[i],
+                                  max_news[i], *extra)
+
+                state = jax.lax.cond(valid[i], _install, lambda st: st,
+                                     state)
+            return state
+
+        def admit(params, aux, state: SlotBatch, slot, prompt, prompt_len,
+                  max_new, src, tbl_row=None, write_mask=None) -> SlotBatch:
+            """Unified admission = ``attach ∘ prefill`` at width 1: prefill
+            one padded prompt and scatter it into row ``slot`` in a single
+            jitted call.  Composing the two halves (instead of duplicating
+            their bodies) is what makes the disaggregated engine token-
+            identical to this path by construction."""
+            packet = prefill(params, aux, prompt[None],
+                             jnp.asarray(prompt_len, I32)[None], src[None])
+            return attach(state, packet, jnp.zeros((), I32), slot, max_new,
+                          tbl_row, write_mask)
 
         def step(params, aux, state: SlotBatch):
             bst = decode_lib.BPDState(
@@ -502,6 +610,39 @@ class DecodeSession:
                       + 2 * (state.active & out.finished).astype(jnp.int8))
             return new_state, status
 
+        k_win = max(int(getattr(ecfg, "steps_per_sync", 1)), 1)
+
+        def step_windowed(params, aux, state: SlotBatch):
+            """Up to ``steps_per_sync`` decode iterations fused into ONE
+            dispatch — a bounded while_loop over the SAME traced step
+            body, so the commit stream is bitwise identical to stepping
+            one iteration at a time.  The loop exits the moment any row
+            becomes harvestable: finished slots surface to the host at
+            the same iteration they would have with per-step syncs, so
+            slot refill (the continuous-batching win) keeps its timing;
+            only the admission of NEW arrivals can lag by at most
+            ``steps_per_sync - 1`` iterations.  Returns the number of
+            iterations actually run so the engine's model-invocation
+            accounting stays honest (a window is 1..k dispatched
+            forwards, not one)."""
+            if k_win == 1:
+                nst, status = step(params, aux, state)
+                return nst, status, jnp.ones((), I32)
+
+            def body(carry):
+                st, _, i = carry
+                nst, status = step(params, aux, st)
+                return nst, status, i + 1
+
+            def cond(carry):
+                _, status, i = carry
+                return (i < k_win) & ~jnp.any((status & 2) > 0)
+
+            st, status, iters = jax.lax.while_loop(
+                cond, body,
+                (state, jnp.zeros((s,), jnp.int8), jnp.zeros((), I32)))
+            return st, status, iters
+
         def evict(state: SlotBatch, mask) -> SlotBatch:
             # evicted slots also drop their policy state, so a paused slot
             # can never leak schedule/drafter history into a later request
@@ -520,8 +661,11 @@ class DecodeSession:
         if mesh is None:
             return ServingFns(init=jax.jit(init_slots),
                               admit=jax.jit(admit),
-                              step=jax.jit(step),
+                              step=jax.jit(step_windowed),
                               evict=jax.jit(evict),
+                              prefill=jax.jit(prefill),
+                              attach=jax.jit(attach),
+                              attach_many=jax.jit(attach_many),
                               paged=paged_geom)
 
         rep = NamedSharding(mesh, P())
@@ -532,6 +676,27 @@ class DecodeSession:
                     rep, rep, rep, rep)
         if paged_geom is not None:
             admit_in = admit_in + (rep, rep)  # tbl_row, write_mask
+        # prefill-worker geometry: packet rows shard over the pod axis
+        # (prefill workers own their data-axis slice); the attach scatter
+        # reshards them into the ("pod", "data")-split slot slab — the
+        # sharding-constrained prefill→decode handoff transfer
+        w = max(ecfg.prefill_slots, 1)
+        pkt_struct = jax.eval_shape(
+            prefill, _structs(self.params), _structs(self.aux_params),
+            jax.ShapeDtypeStruct((w, ecfg.max_prompt_len), I32),
+            jax.ShapeDtypeStruct((w,), I32),
+            jax.ShapeDtypeStruct((w, ecfg.max_prompt_len), I32))
+        pkt_sh = sharding_policy.named(
+            mesh, sharding_policy.packet_specs(cfg, pkt_struct, mesh,
+                                               policy=pol))
+        pre_ax = sharding_policy.prefill_axes(mesh, w)
+        prompts_sh = NamedSharding(mesh, P(pre_ax, None))
+        plens_sh = NamedSharding(mesh, P(pre_ax))
+        attach_in = (slot_sh, pkt_sh, rep, rep, rep)
+        attach_many_in = (slot_sh, pkt_sh, rep, rep, rep, rep)
+        if paged_geom is not None:
+            attach_in = attach_in + (rep, rep)  # tbl_row, write_mask
+            attach_many_in = attach_many_in + (rep, rep)
         return ServingFns(
             init=self._with_mesh(jax.jit(init_slots, in_shardings=(rep,),
                                          out_shardings=slot_sh)),
@@ -540,10 +705,24 @@ class DecodeSession:
                 in_shardings=admit_in,
                 out_shardings=slot_sh, donate_argnums=state_dn)),
             step=self._with_mesh(jax.jit(
-                step, in_shardings=(self.param_shardings, aux_sh, slot_sh),
-                out_shardings=(slot_sh, rep), donate_argnums=state_dn)),
+                step_windowed,
+                in_shardings=(self.param_shardings, aux_sh, slot_sh),
+                out_shardings=(slot_sh, rep, rep),
+                donate_argnums=state_dn)),
             evict=self._with_mesh(jax.jit(
                 evict, in_shardings=(slot_sh, mask_sh),
+                out_shardings=slot_sh,
+                donate_argnums=(0,) if self.donate else ())),
+            prefill=self._with_mesh(jax.jit(
+                prefill,
+                in_shardings=(self.param_shardings, aux_sh, prompts_sh,
+                              plens_sh, prompts_sh),
+                out_shardings=pkt_sh)),
+            attach=self._with_mesh(jax.jit(
+                attach, in_shardings=attach_in, out_shardings=slot_sh,
+                donate_argnums=(0,) if self.donate else ())),
+            attach_many=self._with_mesh(jax.jit(
+                attach_many, in_shardings=attach_many_in,
                 out_shardings=slot_sh,
                 donate_argnums=(0,) if self.donate else ())),
             paged=paged_geom,

@@ -239,3 +239,77 @@ def test_preemption_over_the_wire(server):
                 for t in d["tokens"]]
         ref = _reference(params, cfg, dec, prompts[i], budget)
         assert toks == dones[i]["tokens"] == ref, f"rid-slot {i}"
+
+
+def test_graceful_drain_over_the_wire():
+    """POST /drain against a live (disaggregated) server: 202 immediately,
+    readiness flips to 503 "draining", new submissions are refused with
+    503, the in-flight stream finishes token-exact, and the listener then
+    closes — the whole SIGTERM shutdown path, driven over the wire (the
+    signal handler and this route share ``begin_drain``).  Needs its own
+    server: a drained listener cannot be reused by later tests."""
+    cfg = tiny_dense()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    dec = DecodeConfig(max_new_tokens=MAX_NEW, block_k=4)
+    eng = ContinuousBatchingEngine(
+        params, cfg, dec,
+        EngineConfig(num_slots=2, max_prompt_len=24, max_new_cap=MAX_NEW,
+                     prefill_slots=2, handoff_cap=4))
+    srv = HTTPServer(Frontend(Scheduler(eng), max_queue=2), port=0)
+    loop = asyncio.new_event_loop()
+    thread = threading.Thread(target=loop.run_forever, daemon=True)
+    thread.start()
+    asyncio.run_coroutine_threadsafe(srv.start(), loop).result(timeout=300)
+    try:
+        rng = np.random.default_rng(31)
+        prompt = rng.integers(0, cfg.vocab_size, size=6)
+        results = {}
+
+        def client():
+            results["r"] = _request(
+                srv, "POST", "/v1/generate",
+                {"prompt": prompt.tolist(), "max_new": MAX_NEW})
+
+        t = threading.Thread(target=client)
+        t.start()
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            if _metrics_map(srv)["active_slots"] >= 1:
+                break
+            time.sleep(0.002)
+        else:
+            pytest.fail("in-flight request never occupied a slot")
+
+        status, _, raw = _request(srv, "POST", "/drain")
+        assert status == 202
+        body = json.loads(raw)
+        assert body["draining"] is True and body["in_flight"] >= 1
+        status, _, _ = _request(srv, "POST", "/drain")   # idempotent
+        assert status == 202
+        status, _, raw = _request(srv, "GET", "/readyz")
+        assert status == 503 and raw == b"draining\n"
+        status, _, raw = _request(srv, "POST", "/v1/generate",
+                                  {"prompt": [1, 2, 3], "max_new": 4})
+        assert status == 503 and b"drain" in raw
+
+        t.join(timeout=120)
+        assert not t.is_alive(), "in-flight stream did not finish"
+        status, _, raw = results["r"]
+        assert status == 200
+        done = [d for ev, d in _sse_events(raw) if ev == "done"][0]
+        assert done["tokens"] == _reference(params, cfg, dec, prompt,
+                                            MAX_NEW)
+        # drained + flushed -> the listener closes; new connections refuse
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            try:
+                _request(srv, "GET", "/healthz")
+                time.sleep(0.01)
+            except OSError:
+                break
+        else:
+            pytest.fail("listener never closed after the drain finished")
+    finally:
+        asyncio.run_coroutine_threadsafe(srv.stop(), loop).result(timeout=60)
+        loop.call_soon_threadsafe(loop.stop)
+        thread.join(timeout=10)
