@@ -17,8 +17,13 @@ benchmark-smoke job pairs it with ``benchmarks/serve_throughput.py
 --smoke`` and FAILS if the ``exact`` policy's mean-k̂ regresses against
 the committed ``BENCH_decode.json`` baseline, if no new drafter beats
 HeadsDrafter+exact, if the distilled ``draft_model`` drafter stops
-beating heads+exact, or if the ``adaptive`` rows collapse back to
-metric-identical-with-exact (cap never binding).
+beating heads+exact, if the ``adaptive`` rows collapse back to
+metric-identical-with-exact (cap never binding), if the scheduled-
+sampling rows lose their lift (``ss_exact`` heads >= 1.3x the gold-
+prefix ``ss_baseline`` acceptance on open-ended LM decode;
+``ss_draft_model`` student beats the gold-prefix student), or if the
+``locality`` image policy stops beating its raster-order twin on
+iters/token at no-worse reconstruction MAE.
 """
 from __future__ import annotations
 
@@ -186,7 +191,10 @@ def main():
 
     if "policies" in which:
         sweep = _bench_module("policy_sweep")
-        for name, r in sweep.run().items():
+        res = sweep.run()
+        res.update(sweep.run_scheduled_sampling())
+        res.update(sweep.run_locality())
+        for name, r in res.items():
             for key, val in r.items():
                 emit(f"policies/{name}/{key}", round(val, 4))
 
@@ -252,6 +260,63 @@ def main():
                 f"sequential forwards per iteration — suffix carry-over "
                 f"(DraftModelDrafter.carry_over) stopped saving the "
                 f"catch-up step")
+        # scheduled-sampling student: gentle prefix mixing must keep its
+        # edge over the gold-prefix student on the speculative path
+        ss_draft = float(rows["policies/ss_draft_model/mean_khat"])
+        if ss_draft <= draft:
+            raise SystemExit(
+                f"SCHEDULED-SAMPLING STUDENT REGRESSION: the SS-trained "
+                f"draft student (mean-k̂ {ss_draft:.3f}) no longer beats "
+                f"the gold-prefix student ({draft:.3f}) — check "
+                f"TrainConfig.scheduled_sampling / the ss_ratio=0.3 "
+                f"anneal in policy_sweep.train_student")
+        # scheduled-sampling heads: the exposure-bias lift on open-ended
+        # LM decode (the ISSUE's headline gate: >= 1.3x the gold-prefix
+        # baseline, token-identity asserted inside the sweep)
+        ss_base = float(rows["policies/ss_baseline/acceptance_rate"])
+        ss_new = float(rows["policies/ss_exact/acceptance_rate"])
+        if ss_new < 1.3 * ss_base:
+            raise SystemExit(
+                f"SCHEDULED-SAMPLING REGRESSION: SS-trained heads' "
+                f"acceptance rate {ss_new:.4f} is below 1.3x the "
+                f"gold-prefix baseline {ss_base:.4f} — the scheduled-"
+                f"sampling + self-target head fine-tune lost its "
+                f"exposure-bias edge (see policy_sweep."
+                f"run_scheduled_sampling)")
+        # locality-aware image decoding: interpolation drafts must beat
+        # the raster twin on iters/token WITHOUT giving up reconstruction
+        loc_ipt = float(rows["policies/locality/iters_per_token"])
+        ras_ipt = float(rows["policies/locality_raster/iters_per_token"])
+        if loc_ipt >= ras_ipt:
+            raise SystemExit(
+                f"LOCALITY REGRESSION: the locality policy spends "
+                f"{loc_ipt:.4f} iters/token vs the raster-order twin's "
+                f"{ras_ipt:.4f} — committed-neighbor interpolation "
+                f"stopped out-drafting raster extrapolation (see "
+                f"policy_sweep.run_locality)")
+        loc_mae = float(rows["policies/locality/mae"])
+        ras_mae = float(rows["policies/locality_raster/mae"])
+        if loc_mae > ras_mae:
+            raise SystemExit(
+                f"LOCALITY MAE REGRESSION: the locality arm reconstructs "
+                f"at MAE {loc_mae:.4f}, worse than the raster twin's "
+                f"{ras_mae:.4f} — the iters/token win no longer comes "
+                f"for free")
+        # per-PR regression bounds against the committed baselines for the
+        # new rows (same 5% discipline as the exact/topk_tree gates above)
+        loc_base = base_rows.get("policies/locality/iters_per_token")
+        if loc_base is not None and loc_ipt > 1.05 * float(loc_base):
+            raise SystemExit(
+                f"LOCALITY BASELINE REGRESSION: iters/token {loc_ipt:.4f} "
+                f"exceeds the committed baseline {float(loc_base):.4f} "
+                f"by more than 5% — see BENCH_decode.json")
+        ss_committed = base_rows.get("policies/ss_exact/acceptance_rate")
+        if ss_committed is not None and ss_new < 0.95 * float(ss_committed):
+            raise SystemExit(
+                f"SS BASELINE REGRESSION: ss_exact acceptance "
+                f"{ss_new:.4f} fell below the committed baseline "
+                f"{float(ss_committed):.4f} (tolerance 5%) — see "
+                f"BENCH_decode.json")
         # (the adaptive-cap-must-engage gate lives INSIDE sweep.run() on
         # the unrounded metrics — the rows here are rounded to 4 decimals,
         # so re-checking them would false-fire on legitimately tiny

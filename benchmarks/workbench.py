@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.config import DecodeConfig, ModelConfig, TrainConfig
 from repro.core import decode as D
+from repro.core import train as train_lib
 from repro.data.synthetic import CipherMT, MarkovLM, OrdinalCurves
 from repro.launch import steps as steps_lib
 from repro.models import model as M
@@ -104,9 +105,14 @@ def train_steps(cfg: ModelConfig, tc: TrainConfig, params, gen, n_steps: int,
     step = jax.jit(steps_lib.make_train_step(cfg, tc, mask=mask))
     key = jax.random.PRNGKey(seed)
     loss = float("nan")
-    for _ in range(n_steps):
+    for i in range(n_steps):
         key, sub = jax.random.split(key)
         batch = {k: jnp.asarray(v) for k, v in next(gen).items()}
+        if tc.scheduled_sampling:
+            # traced scalar: the linear gold->model anneal advances per
+            # step without retracing the jitted train step
+            batch["ss_ratio"] = jnp.float32(
+                train_lib.scheduled_sampling_ratio(tc, i))
         params, opt, metrics = step(params, opt, batch, sub)
         loss = float(metrics["loss"])
     return params, loss

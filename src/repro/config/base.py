@@ -172,6 +172,12 @@ class DecodeConfig:
     page_size: int = 16            # tokens per KV page (paged backend only)
     fused_verify: bool = False     # one-pass Pallas accept kernel (token-
     #                                identical opt-in; kernels/fused_verify.py)
+    # 2-D raster geometry for the locality-aware image policy
+    # (core.policy."locality"): the token stream is an image serialized in
+    # the progressive-lattice order of data.synthetic.locality_order.
+    image_height: int = 0          # grid rows (0 = not an image workload)
+    image_width: int = 0           # grid cols
+    locality_stride: int = 4       # coarse-lattice stride (power of two)
 
     def replace(self, **kw) -> "DecodeConfig":
         return dataclasses.replace(self, **kw)
@@ -199,6 +205,35 @@ class TrainConfig:
     detach_head_residual: bool = False  # stabilized fine-tuning (see heads.py)
     label_smoothing: float = 0.0
     z_loss: float = 1e-4
+    # Parallel scheduled sampling (arXiv:1906.04331): one extra no-grad
+    # forward predicts every position; the conditioning prefix is mixed
+    # gold -> model per position with an annealed probability so heads /
+    # draft students train on decode-time distributions (targets stay gold
+    # unless ss_self_targets).
+    scheduled_sampling: bool = False
+    ss_ratio: float = 0.5          # peak probability of a model-token swap
+    ss_anneal_steps: int = 0       # linear 0 -> ss_ratio ramp (0 = constant)
+    # Self-distilled targets: supervise heads with the frozen base's own
+    # (deterministic) chain predictions instead of the (stochastic) gold
+    # stream — exact-acceptance verification accepts a slot iff the head
+    # matches p_1's chain, so this trains the actual acceptance condition
+    # ("consistent mode breaking", the §6.2 distillation effect applied to
+    # heads).  Only meaningful with scheduled_sampling and a frozen base.
+    ss_self_targets: bool = False
+
+    def __post_init__(self):
+        valid_head_loss = ("random", "mean")
+        if self.head_loss not in valid_head_loss:
+            raise ValueError(
+                f"TrainConfig.head_loss must be one of {valid_head_loss}, "
+                f"got {self.head_loss!r}")
+        if not 0.0 <= self.ss_ratio <= 1.0:
+            raise ValueError(
+                f"TrainConfig.ss_ratio must be in [0, 1], got {self.ss_ratio}")
+        if self.ss_anneal_steps < 0:
+            raise ValueError(
+                f"TrainConfig.ss_anneal_steps must be >= 0, "
+                f"got {self.ss_anneal_steps}")
 
     def replace(self, **kw) -> "TrainConfig":
         return dataclasses.replace(self, **kw)

@@ -30,9 +30,23 @@ def distill_lm_batches(teacher_params, cfg: ModelConfig, batches: Iterable[Dict]
     fn = jax.jit(lambda b: greedy_decode(teacher_params, cfg, dec, b))
     out = []
     for batch in batches:
+        s = batch["tokens"].shape[1]
+        if prompt_len >= s:
+            raise ValueError(
+                f"distill_lm_batches: prompt_len={prompt_len} leaves no "
+                f"positions to distill in a width-{s} batch")
+        if prompt_len + max_new < s:
+            # the decode buffer only covers prompt_len + max_new positions;
+            # slicing toks[:, :s] past that would return zero-initialized
+            # buffer padding as "teacher tokens" and silently poison the
+            # distillation targets
+            raise ValueError(
+                f"distill_lm_batches: prompt_len + max_new = "
+                f"{prompt_len + max_new} < batch width {s} — the teacher "
+                f"decode cannot fill the stream; raise max_new to at least "
+                f"{s - prompt_len}")
         prompts = batch["tokens"][:, :prompt_len]
         toks, _ = fn({"tokens": prompts})
-        s = batch["tokens"].shape[1]
         new = np.asarray(toks[:, :s])
         out.append(dict(batch, tokens=jnp.asarray(new)))
     return out

@@ -45,10 +45,12 @@ remain valid aliases for the corresponding heads-drafted policies.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import DecodeConfig
 
@@ -398,6 +400,140 @@ class TopKTreeDrafter(Drafter):
 
 
 # ---------------------------------------------------------------------------
+# Locality-aware image decoding (arXiv:2507.01957)
+# ---------------------------------------------------------------------------
+
+
+class _LocalityTables(NamedTuple):
+    order: np.ndarray          # (H*W,) generation slot -> raster index
+    boundaries: np.ndarray     # class-end offsets (block cut points)
+    next_boundary: np.ndarray  # (H*W + 1,) smallest boundary > p
+    n1: np.ndarray             # (H*W,) committed-neighbor generation index
+    n2: np.ndarray
+    coarse_len: int            # boundaries[0] — the coarse-lattice prefix
+
+
+@functools.lru_cache(maxsize=None)
+def _locality_tables(height: int, width: int, stride: int) -> _LocalityTables:
+    from repro.data.synthetic import locality_plan
+
+    order, bounds, n1, n2 = locality_plan(height, width, stride)
+    n = order.size
+    nb = np.full(n + 1, n + (1 << 20), np.int64)   # "no boundary left"
+    for p in range(n + 1):
+        j = int(np.searchsorted(bounds, p, side="right"))
+        if j < bounds.size:
+            nb[p] = bounds[j]
+    return _LocalityTables(order, bounds, nb.astype(np.int32), n1, n2,
+                           int(bounds[0]))
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalityDrafter(Drafter):
+    """Locality-aware image drafts (arXiv:2507.01957).
+
+    The token stream is an (height, width) raster serialized in the
+    progressive-lattice order of ``data.synthetic.locality_plan`` (coarse
+    lattice first, then non-adjacent refinement classes), so every
+    refinement position has already-committed spatial neighbors — the
+    drafter proposes their rounded average (bilinear-style interpolation
+    on the ordinal vocabulary) instead of the heads' raster
+    extrapolation, then (``window`` > 0) re-ranks the interpolation's
+    ±window neighborhood by the verifier's own head logits — the spatial
+    prior narrows the candidate set, the heads break the quantization
+    rounding ties interpolation cannot see.  State is the committed
+    stream in generation order, re-built from each verified block; slot
+    0 stays the verified greedy token, so exact acceptance is lossless
+    on ANY prompt (drafts change iteration counts, never tokens).
+    """
+
+    height: int = 0
+    width: int = 0
+    stride: int = 4
+    window: int = 1
+
+    def init_state(self, cfg, dec, batch, b, aux=()):
+        n = self.height * self.width
+        k = dec.block_k or getattr(cfg, "bpd_k", 1)
+        buf = jnp.zeros((b, n + max(int(k), 1)), I32)
+        if batch is not None and "tokens" in batch:
+            toks = jnp.asarray(batch["tokens"], I32)[:, :n]
+            buf = jax.lax.dynamic_update_slice(buf, toks, (0, 0))
+        return {"grid": buf}
+
+    def draft(self, inputs: DraftInputs, state):
+        buf = state["grid"]
+        b, k = inputs.old_proposals.shape
+        cap = buf.shape[1]
+        tables = _locality_tables(self.height, self.width, self.stride)
+        n1 = jnp.asarray(tables.n1)
+        n2 = jnp.asarray(tables.n2)
+        # 1. commit the just-verified block into the generation-order buffer.
+        #    Slot k̂-1 carries ``prev_token`` (the committed token at
+        #    text_len - 1): in loop iterations that equals old_proposals
+        #    there, and on the prefill call (old_proposals zeroed, k̂ = 1)
+        #    it writes the real last prompt token.
+        offs = jnp.arange(k, dtype=I32)[None, :]
+        start = inputs.text_len[:, None] - inputs.khat[:, None]
+        idx = jnp.clip(start + offs, 0, cap - 1)
+        vals = jnp.where(offs == inputs.khat[:, None] - 1,
+                         inputs.prev_token[:, None], inputs.old_proposals)
+        keep = offs < inputs.khat[:, None]
+
+        def row_commit(row, ix, v, m):
+            return row.at[ix].set(jnp.where(m, v, row[ix]))
+
+        buf = jax.vmap(row_commit)(buf, idx, vals.astype(I32), keep)
+        # 2. propose: each next position interpolates its committed parents
+        pos = jnp.clip(inputs.text_len[:, None] + offs, 0, n1.shape[0] - 1)
+        a = jnp.take_along_axis(buf, jnp.clip(n1[pos], 0, cap - 1), axis=1)
+        c = jnp.take_along_axis(buf, jnp.clip(n2[pos], 0, cap - 1), axis=1)
+        proposals = (a + c + 1) // 2
+        if self.window:
+            vocab = inputs.logits.shape[-1]
+            hl = _gather_slot(inputs.logits, inputs.slot)   # (B, heads, V)
+            hidx = jnp.minimum(jnp.arange(k), hl.shape[1] - 1)
+            deltas = jnp.arange(-self.window, self.window + 1, dtype=I32)
+            cands = jnp.clip(proposals[..., None] + deltas, 0, vocab - 1)
+            scores = jnp.take_along_axis(hl[:, hidx, :], cands, axis=-1)
+            pick = jnp.argmax(scores, axis=-1)
+            proposals = jnp.take_along_axis(cands, pick[..., None], -1)[..., 0]
+        head_argmax = jnp.argmax(inputs.logits, axis=-1)
+        verified = _gather_slot(head_argmax, inputs.slot)[:, 0]  # p_1 argmax
+        proposals = proposals.at[:, 0].set(verified)
+        return proposals.astype(I32), {"grid": buf}
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalitySchedule(BlockSchedule):
+    """Clamps each accepted block at the next offset-class boundary of the
+    progressive-lattice order, so a block never commits positions whose
+    spatial parents are still uncommitted — and every committed block
+    stays spatially non-adjacent within its class.  State: a per-row
+    generation cursor starting at ``start`` (the coarse prompt length in
+    the canonical image workload; any other prompt length is merely a
+    sub-optimal cut alignment, still lossless under exact acceptance)."""
+
+    height: int = 0
+    width: int = 0
+    stride: int = 4
+    start: int = 0
+
+    def init_state(self, b: int) -> Any:
+        return {"pos": jnp.full((b,), self.start, I32)}
+
+    def block_size(self, accepts, remaining, state):
+        tables = _locality_tables(self.height, self.width, self.stride)
+        nb = jnp.asarray(tables.next_boundary)
+        pos = state["pos"]
+        room = nb[jnp.clip(pos, 0, nb.shape[0] - 1)] - pos
+        khat = jnp.minimum(_prefix_len(accepts),
+                           jnp.minimum(remaining, room))
+        khat = jnp.maximum(khat, 1)
+        return khat, {"pos": pos + khat}
+
+
+# ---------------------------------------------------------------------------
 # The composed policy + registry
 # ---------------------------------------------------------------------------
 
@@ -523,6 +659,25 @@ register_policy("input_copy", lambda dec: DecodePolicy(
 register_policy("topk_tree", lambda dec: DecodePolicy(
     TopKTreeDrafter(fanout=max(dec.top_k, 2)),
     _maybe_fused(ExactAcceptor(), dec), _schedule_for(dec), name="topk_tree"))
+
+
+def _locality_policy(dec: DecodeConfig) -> DecodePolicy:
+    h, w = dec.image_height, dec.image_width
+    if h <= 0 or w <= 0:
+        raise ValueError(
+            "policy 'locality' needs the 2-D raster geometry: set "
+            "DecodeConfig.image_height / image_width (and optionally "
+            "locality_stride) to the grid shape of the token stream")
+    tables = _locality_tables(h, w, dec.locality_stride)
+    return DecodePolicy(
+        LocalityDrafter(height=h, width=w, stride=dec.locality_stride),
+        _maybe_fused(ExactAcceptor(), dec),
+        LocalitySchedule(height=h, width=w, stride=dec.locality_stride,
+                         start=tables.coarse_len),
+        name="locality")
+
+
+register_policy("locality", _locality_policy)
 
 # the model-backed speculative drafter lives in core.draft (it pulls in the
 # model stack); importing it here registers the "draft_model" policy so the

@@ -13,6 +13,12 @@ Key paper mechanics reproduced:
   head index from {1..k-1}.
 * Aux losses: MoE load-balance + router-z (weighted per config), logit
   z-loss, optional label smoothing.
+* **Parallel scheduled sampling** (arXiv:1906.04331) — with
+  ``scheduled_sampling=True`` one extra no-grad forward predicts every
+  position of the gold stream at once; the conditioning prefix is then a
+  per-position gold/model mixture (annealed ``ss_ratio``) so heads and
+  draft students train on the prefixes they actually see at decode time.
+  Targets stay gold, so base-model quality is unaffected.
 """
 from __future__ import annotations
 
@@ -71,6 +77,83 @@ def _sample_head(key, cfg: ModelConfig, tc: TrainConfig):
 
 
 # ---------------------------------------------------------------------------
+# Parallel scheduled sampling (arXiv:1906.04331)
+# ---------------------------------------------------------------------------
+
+
+def scheduled_sampling_ratio(tc: TrainConfig, step: int) -> float:
+    """Host-side anneal: linear 0 -> ``tc.ss_ratio`` over
+    ``tc.ss_anneal_steps`` training steps (constant when 0).  Training
+    loops thread the per-step value into the jitted loss as the traced
+    scalar ``batch["ss_ratio"]``; batches without the key fall back to the
+    constant ``tc.ss_ratio``."""
+    if not tc.scheduled_sampling:
+        return 0.0
+    if tc.ss_anneal_steps <= 0:
+        return float(tc.ss_ratio)
+    frac = min(max(step, 0) / tc.ss_anneal_steps, 1.0)
+    return float(tc.ss_ratio) * frac
+
+
+def _ss_ratio_for(tc: TrainConfig, batch: Dict):
+    return batch["ss_ratio"] if "ss_ratio" in batch else jnp.float32(tc.ss_ratio)
+
+
+def ss_mix_lm(params, cfg: ModelConfig, batch: Dict, key, ratio,
+              with_pred: bool = False):
+    """Mixed conditioning stream for a causal LM: ONE no-grad forward on the
+    gold stream yields the model's p_1 prediction of every position in
+    parallel (the trick of arXiv:1906.04331 — no sequential rollout), then
+    each conditioning token except position 0 is swapped for the model's
+    prediction of it with probability ``ratio``.  Targets stay gold; with
+    ``with_pred`` the model-token stream (position 0 gold, then the
+    model's prediction of every later position) is also returned — the
+    self-distillation target stream for ``tc.ss_self_targets``."""
+    tokens = batch["tokens"]
+    h = model_lib.embed_inputs(params, cfg, batch)
+    positions = jnp.arange(h.shape[1], dtype=jnp.int32)
+    hidden, _, _ = model_lib.forward_hidden(params, cfg, h,
+                                            positions=positions)
+    hidden = hidden[:, model_lib.prefix_len(cfg, batch):, :]
+    logits = _head_logits_for(params, cfg, hidden, jnp.asarray(0),
+                              freeze_base=True)
+    pred = jax.lax.stop_gradient(jnp.argmax(logits, axis=-1))  # predicts t+1
+    model_tok = jnp.concatenate([tokens[:, :1], pred[:, :-1]], axis=1)
+    swap = jax.random.bernoulli(key, ratio, tokens.shape)
+    swap = swap & (jnp.arange(tokens.shape[1])[None, :] > 0)
+    mixed = jnp.where(swap, model_tok, tokens).astype(tokens.dtype)
+    if with_pred:
+        return mixed, model_tok.astype(tokens.dtype)
+    return mixed
+
+
+def ss_mix_seq2seq(params, cfg: ModelConfig, batch: Dict, key, ratio,
+                   enc_kvs=None, with_pred: bool = False):
+    """Mixed decoder-input stream for seq2seq: like ``ss_mix_lm`` but over
+    the BOS-shifted target; position 0 (BOS) always stays.  Pass the
+    already-computed ``enc_kvs`` to reuse the encoder forward.  With
+    ``with_pred`` also returns the model's per-position prediction of the
+    target stream (``pred[t]`` predicts ``tgt[t]``) for
+    ``tc.ss_self_targets``."""
+    src, tgt = batch["src"], batch["tgt"]
+    if enc_kvs is None:
+        enc_kvs, _ = seq2seq_lib.encode(params, cfg, src)
+    bos = jnp.zeros((tgt.shape[0], 1), tgt.dtype)
+    dec_in = jnp.concatenate([bos, tgt[:, :-1]], axis=1)
+    hidden, _ = seq2seq_lib.forward_hidden(params, cfg, dec_in, enc_kvs)
+    logits = _head_logits_for(params, cfg, hidden, jnp.asarray(0),
+                              freeze_base=True)
+    pred = jax.lax.stop_gradient(jnp.argmax(logits, axis=-1))  # predicts tgt[t]
+    model_in = jnp.concatenate([bos, pred[:, :-1]], axis=1)
+    swap = jax.random.bernoulli(key, ratio, dec_in.shape)
+    swap = swap & (jnp.arange(dec_in.shape[1])[None, :] > 0)
+    mixed = jnp.where(swap, model_in, dec_in).astype(dec_in.dtype)
+    if with_pred:
+        return mixed, pred.astype(tgt.dtype)
+    return mixed
+
+
+# ---------------------------------------------------------------------------
 # Decoder-only LM loss
 # ---------------------------------------------------------------------------
 
@@ -80,9 +163,23 @@ def lm_loss(params, cfg: ModelConfig, tc: TrainConfig, batch: Dict, key
     """batch: tokens (B, S) [+ patch_embeds / frame_embeds per modality].
 
     Head i (0-based) predicts position t+1+i from the hidden state at t.
+
+    With ``tc.scheduled_sampling`` the conditioning stream is the
+    ``ss_mix_lm`` gold/model mixture while the targets below stay gold —
+    unless ``tc.ss_self_targets``, which supervises the heads with the
+    frozen base's own chain predictions (the acceptance condition).
     """
     tokens = batch["tokens"]
-    h = model_lib.embed_inputs(params, cfg, batch)
+    fwd_batch = batch
+    if tc.scheduled_sampling:
+        key, mix_key = jax.random.split(key)
+        mixed, model_tok = ss_mix_lm(params, cfg, batch, mix_key,
+                                     _ss_ratio_for(tc, batch),
+                                     with_pred=True)
+        fwd_batch = dict(batch, tokens=mixed)
+        if tc.ss_self_targets:
+            tokens = model_tok
+    h = model_lib.embed_inputs(params, cfg, fwd_batch)
     positions = jnp.arange(h.shape[1], dtype=jnp.int32)
     hidden, moe_metrics, _ = model_lib.forward_hidden(params, cfg, h,
                                                       positions=positions)
@@ -159,11 +256,24 @@ def masked_prediction_loss(params, cfg: ModelConfig, tc: TrainConfig,
 
 def seq2seq_loss(params, cfg: ModelConfig, tc: TrainConfig, batch: Dict, key
                  ) -> Tuple[jnp.ndarray, Dict]:
-    """batch: src (B,Ss), tgt (B,St); teacher forcing with BOS-shifted tgt."""
+    """batch: src (B,Ss), tgt (B,St); teacher forcing with BOS-shifted tgt.
+
+    With ``tc.scheduled_sampling`` the decoder input is the
+    ``ss_mix_seq2seq`` gold/model mixture while the targets stay gold —
+    unless ``tc.ss_self_targets``, which supervises the heads with the
+    frozen base's own chain predictions (the acceptance condition).
+    """
     src, tgt = batch["src"], batch["tgt"]
     enc_kvs, _ = seq2seq_lib.encode(params, cfg, src)
     bos = jnp.zeros((tgt.shape[0], 1), tgt.dtype)
     dec_in = jnp.concatenate([bos, tgt[:, :-1]], axis=1)
+    if tc.scheduled_sampling:
+        key, mix_key = jax.random.split(key)
+        dec_in, ss_pred = ss_mix_seq2seq(params, cfg, batch, mix_key,
+                                         _ss_ratio_for(tc, batch),
+                                         enc_kvs=enc_kvs, with_pred=True)
+        if tc.ss_self_targets:
+            tgt = ss_pred
     hidden, _ = seq2seq_lib.forward_hidden(params, cfg, dec_in, enc_kvs)
     b, s, _ = hidden.shape
 

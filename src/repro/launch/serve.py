@@ -87,6 +87,16 @@ def main():
                     help="tokens per KV page (multiple of 8; paged only)")
     ap.add_argument("--top-k", type=int, default=2)
     ap.add_argument("--epsilon", type=float, default=2.0)
+    ap.add_argument("--image-height", type=int, default=0,
+                    help="2-D raster rows for the locality policy "
+                         "(--policy locality / --policies locality=N): "
+                         "the token stream is an image serialized in the "
+                         "progressive-lattice order")
+    ap.add_argument("--image-width", type=int, default=0,
+                    help="2-D raster cols for the locality policy")
+    ap.add_argument("--locality-stride", type=int, default=4,
+                    help="coarse-lattice stride of the locality order "
+                         "(power of two)")
     ap.add_argument("--draft-arch", default=None,
                     help="arch of the speculative draft model (smoke "
                          "config; --policy draft_model); defaults to "
@@ -166,7 +176,10 @@ def main():
                        top_k=args.top_k, epsilon=args.epsilon,
                        cache_backend=args.cache_backend,
                        page_size=args.page_size,
-                       fused_verify=args.fused_verify)
+                       fused_verify=args.fused_verify,
+                       image_height=args.image_height,
+                       image_width=args.image_width,
+                       locality_stride=args.locality_stride)
     task = MarkovLM(vocab=min(cfg.vocab_size, 256), temperature=0.2,
                     seed=args.seed)
     prompts = jnp.asarray(task.sample(np.random.default_rng(args.seed + 1),

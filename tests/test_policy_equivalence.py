@@ -233,6 +233,66 @@ def test_group_partition_validation(stack):
 
 
 # ---------------------------------------------------------------------------
+# Locality-aware image decoding (2-D progressive-lattice drafter/schedule)
+# ---------------------------------------------------------------------------
+
+
+def _locality_stack(stack):
+    """The same tiny model on a 4×4/stride-2 grid geometry — the drafter
+    interpolates committed neighbors and the schedule clamps blocks at
+    refinement-class boundaries."""
+    cfg, params, dec, bundles = stack
+    return cfg, params, dec.replace(image_height=4, image_width=4,
+                                    locality_stride=2), bundles
+
+
+def test_locality_requires_grid_geometry(stack):
+    from repro.config import get_policy
+
+    cfg, params, dec, _ = stack
+    with pytest.raises(ValueError, match="image_height"):
+        get_policy(dec, "locality")
+
+
+def test_locality_policy_lossless(stack):
+    """Under exact acceptance the locality drafter moves iteration counts,
+    never tokens: its stream equals the heads-drafted exact stream."""
+    cfg, params, decl, _ = _locality_stack(stack)
+    d = decl.replace(max_new_tokens=12)
+    rng = np.random.default_rng(67)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, 4)))
+    outs = {}
+    for pol in ("exact", "locality"):
+        out, stats = DecodeSession(params, cfg, d, policy=pol).decode(
+            {"tokens": prompts})
+        outs[pol] = np.asarray(out)
+    np.testing.assert_array_equal(outs["locality"], outs["exact"])
+
+
+def test_locality_engine_token_identical(stack):
+    """The ``locality`` group in a mixed engine — admissions and evictions
+    interleaved with an exact group — matches the single-policy
+    DecodeSession reference per request, tokens AND generated counts."""
+    cfg, params, decl, bundles = _locality_stack(stack)
+    ecfg = EngineConfig(num_slots=2, max_prompt_len=6, max_new_cap=12)
+    eng = ContinuousBatchingEngine(params, cfg, decl, ecfg, bundles=bundles,
+                                   policies={"locality": 1, "exact": 1})
+    sched = Scheduler(eng)
+    rng = np.random.default_rng(61)
+    reqs = [Request(rid=i, policy=pol,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(3, 7))),
+                    max_new=int(rng.integers(4, 13)))
+            for i, pol in enumerate(["locality", "exact"] * 3)]
+    for r in reqs:
+        sched.submit(r)
+    finished = sched.run()
+    _check_all((cfg, params, decl, bundles), ecfg, finished, reqs)
+    assert all(v == 1 for v in eng.compile_counts().values()), \
+        eng.compile_counts()
+
+
+# ---------------------------------------------------------------------------
 # Disaggregated prefill/decode: token identity with the dense references
 # ---------------------------------------------------------------------------
 
@@ -509,6 +569,28 @@ def test_mixed_policy_engine_sharded_token_identical(stack, mesh):
         axes = {a for e in k.sharding.spec if e
                 for a in (e if isinstance(e, tuple) else (e,))}
         assert {"data", "model"} <= axes, (g.name, k.sharding)
+
+
+@pytest.mark.sharded
+def test_locality_engine_sharded_token_identical(stack, mesh):
+    """The locality group's grid-buffer drafter state (B, n+k) and schedule
+    position counter shard over the data axis like any slot-leading state:
+    the 2×2 mesh run matches the single-device single-policy references."""
+    cfg, params, decl, bundles = _locality_stack(stack)
+    ecfg = EngineConfig(num_slots=4, max_prompt_len=6, max_new_cap=12)
+    eng = ContinuousBatchingEngine(
+        params, cfg, decl, ecfg, mesh=mesh, bundles=bundles,
+        policies={"locality": 2, "exact": 2})
+    sched = Scheduler(eng)
+    rng = np.random.default_rng(71)
+    reqs = [Request(rid=i, policy=pol,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(3, 7))),
+                    max_new=int(rng.integers(4, 13)))
+            for i, pol in enumerate(["locality", "exact"] * 3)]
+    for r in reqs:
+        sched.submit(r)
+    _check_all((cfg, params, decl, bundles), ecfg, sched.run(), reqs)
 
 
 @pytest.mark.sharded

@@ -6,8 +6,9 @@ import numpy as np
 import pytest
 
 from conftest import tiny_dense, tiny_seq2seq
-from repro.config import TrainConfig
-from repro.core.train import lm_loss, seq2seq_loss
+from repro.config import DecodeConfig, TrainConfig
+from repro.core.train import (lm_loss, scheduled_sampling_ratio, seq2seq_loss,
+                              ss_mix_lm, ss_mix_seq2seq)
 from repro.data.synthetic import CipherMT, MarkovLM
 from repro.launch import steps as steps_lib
 from repro.models import model as M
@@ -105,6 +106,141 @@ def test_random_subloss_is_unbiased_sample_of_heads():
     assert len(per_head) == cfg.bpd_k
     np.testing.assert_allclose(np.mean(list(per_head.values())),
                                float(loss_mean), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Parallel scheduled sampling (TrainConfig.scheduled_sampling)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduled_sampling_ratio_anneal():
+    """Linear gold->model ramp: 0 at step 0, peak at ss_anneal_steps, flat
+    after; constant when ss_anneal_steps=0; identically 0 when disabled."""
+    tc = TrainConfig(scheduled_sampling=True, ss_ratio=0.8, ss_anneal_steps=10)
+    assert scheduled_sampling_ratio(tc, 0) == 0.0
+    assert scheduled_sampling_ratio(tc, 5) == pytest.approx(0.4)
+    assert scheduled_sampling_ratio(tc, 10) == pytest.approx(0.8)
+    assert scheduled_sampling_ratio(tc, 999) == pytest.approx(0.8)
+    const = TrainConfig(scheduled_sampling=True, ss_ratio=0.5)
+    assert scheduled_sampling_ratio(const, 0) == 0.5
+    assert scheduled_sampling_ratio(const, 100) == 0.5
+    off = TrainConfig(ss_ratio=0.5, ss_anneal_steps=10)
+    assert scheduled_sampling_ratio(off, 7) == 0.0
+
+
+def test_ss_mix_lm_deterministic_and_gold_anchored():
+    """The mixed batch is a pure function of (params, batch, key, ratio);
+    position 0 always stays gold; ratio=0 is the identity; a real ratio
+    actually swaps tokens and every swapped token is a model prediction."""
+    cfg = tiny_dense(bpd_k=2, vocab_size=32)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 20), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    key = jax.random.PRNGKey(3)
+    m1 = ss_mix_lm(params, cfg, batch, key, jnp.float32(0.7))
+    m2 = ss_mix_lm(params, cfg, batch, key, jnp.float32(0.7))
+    np.testing.assert_array_equal(m1, m2)
+    np.testing.assert_array_equal(m1[:, 0], tokens[:, 0])
+    assert bool((m1 != tokens).any()), "ratio=0.7 swapped nothing"
+    m0 = ss_mix_lm(params, cfg, batch, key, jnp.float32(0.0))
+    np.testing.assert_array_equal(m0, tokens)
+
+
+def test_ss_self_targets_swaps_supervision():
+    """``ss_self_targets`` supervises with the base's own chain: the
+    with_pred stream anchors at the gold first token, shifts the model's
+    teacher-forced predictions into positions 1.., and changes the loss
+    relative to gold-target scheduled sampling (same params, same key)."""
+    cfg = tiny_dense(bpd_k=2, vocab_size=32)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 20), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "ss_ratio": jnp.float32(0.5)}
+    key = jax.random.PRNGKey(3)
+    mixed, model_tok = ss_mix_lm(params, cfg, batch, key, jnp.float32(0.5),
+                                 with_pred=True)
+    np.testing.assert_array_equal(
+        mixed, ss_mix_lm(params, cfg, batch, key, jnp.float32(0.5)))
+    np.testing.assert_array_equal(model_tok[:, 0], tokens[:, 0])
+    assert model_tok.shape == tokens.shape
+    assert bool((model_tok != tokens).any()), (
+        "untrained base reproduced the random gold stream exactly")
+    tc = TrainConfig(scheduled_sampling=True, ss_ratio=0.5, head_loss="mean",
+                     freeze_base=True)
+    loss_gold, _ = lm_loss(params, cfg, tc, batch, key)
+    tc_self = tc.replace(ss_self_targets=True)
+    loss_self, _ = lm_loss(params, cfg, tc_self, batch, key)
+    assert not np.isclose(float(loss_gold), float(loss_self)), (
+        "self-targets did not change the training signal")
+
+
+def test_ss_mix_seq2seq_bos_anchored():
+    cfg = tiny_seq2seq(bpd_k=2)
+    params = S.init(jax.random.PRNGKey(0), cfg)
+    src = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
+                             cfg.vocab_size)
+    tgt = jax.random.randint(jax.random.PRNGKey(2), (4, 12), 0,
+                             cfg.vocab_size)
+    batch = {"src": src, "tgt": tgt}
+    key = jax.random.PRNGKey(3)
+    m1 = ss_mix_seq2seq(params, cfg, batch, key, jnp.float32(0.7))
+    np.testing.assert_array_equal(
+        m1, ss_mix_seq2seq(params, cfg, batch, key, jnp.float32(0.7)))
+    assert bool((m1[:, 0] == 0).all()), "BOS slot must stay gold"
+    gold_in = jnp.concatenate([jnp.zeros((4, 1), tgt.dtype), tgt[:, :-1]], 1)
+    np.testing.assert_array_equal(
+        ss_mix_seq2seq(params, cfg, batch, key, jnp.float32(0.0)), gold_in)
+    assert bool((m1 != gold_in).any())
+
+
+def test_lm_loss_decreases_under_scheduled_sampling():
+    """Training with the SS mixed prefix still learns the Markov task —
+    the no-grad mixing forward must not detach the loss from the data."""
+    cfg = tiny_dense(bpd_k=2, vocab_size=32)
+    tc = TrainConfig(global_batch=8, seq_len=32, lr=3e-3, warmup_steps=10,
+                     head_loss="mean", scheduled_sampling=True, ss_ratio=0.3)
+    task = MarkovLM(vocab=cfg.vocab_size, temperature=0.15)
+    _, _, losses = _train(cfg, tc, task.batches(batch=8, seq_len=32), 120)
+    assert np.mean(losses[-10:]) < 0.85 * np.mean(losses[:5])
+
+
+def test_train_config_validation():
+    """Unknown head_loss used to fall through silently to the mean branch;
+    now every invalid knob fails loudly at construction, naming the valid
+    choices (satellite regression for the head_loss fall-through bug)."""
+    with pytest.raises(ValueError, match="head_loss.*random.*mean"):
+        TrainConfig(head_loss="banana")
+    with pytest.raises(ValueError, match="ss_ratio"):
+        TrainConfig(ss_ratio=1.5)
+    with pytest.raises(ValueError, match="ss_anneal_steps"):
+        TrainConfig(ss_anneal_steps=-3)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-level distillation geometry (core.distill regression)
+# ---------------------------------------------------------------------------
+
+
+def test_distill_lm_batches_rejects_short_decode():
+    """Regression: prompt_len + max_new < batch width used to slice
+    zero-initialized decode-buffer padding into the distillation targets;
+    the geometry is now validated up front."""
+    from repro.core.distill import distill_lm_batches
+
+    cfg = tiny_dense(bpd_k=1, vocab_size=32, bpd_enabled=False)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                          cfg.vocab_size)}
+    with pytest.raises(ValueError, match="cannot fill the stream"):
+        distill_lm_batches(params, cfg, [batch], prompt_len=4, max_new=4)
+    with pytest.raises(ValueError, match="no positions to distill"):
+        distill_lm_batches(params, cfg, [batch], prompt_len=12, max_new=4)
+    # valid geometry: prompts preserved, continuation is the teacher's
+    out = distill_lm_batches(params, cfg, [batch], prompt_len=4, max_new=8)
+    assert out[0]["tokens"].shape == batch["tokens"].shape
+    np.testing.assert_array_equal(np.asarray(out[0]["tokens"][:, :4]),
+                                  np.asarray(batch["tokens"][:, :4]))
 
 
 def test_gradient_flows_through_all_heads_mean_loss():
